@@ -1,0 +1,32 @@
+"""MoE dispatch quality: token drop rate vs capacity factor (the dropless
+claim behind the capacity semantics in repro.models.moe)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.models.moe import MoEConfig, moe_init, _route
+
+
+def _drop_rate(cfg: MoEConfig, t: int, seed: int) -> float:
+    params, _, _ = moe_init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, cfg.d_model))
+    _, top_e = _route(params, cfg, x)
+    cap = int(max(1, round(t * cfg.top_k / cfg.n_experts
+                           * cfg.capacity_factor)))
+    counts = np.bincount(np.asarray(top_e).ravel(), minlength=cfg.n_experts)
+    dropped = np.maximum(counts - cap, 0).sum()
+    return float(dropped) / (t * cfg.top_k)
+
+
+def run() -> list[str]:
+    rows = []
+    for cf in (1.0, 1.25, 2.0):
+        cfg = MoEConfig(d_model=64, n_experts=32, top_k=4, d_ff_expert=16,
+                        capacity_factor=cf, model_shards=1)
+        drop, us = timed(_drop_rate, cfg, 8192, 0)
+        rows.append(row(f"moe_drop_cf{cf}", us, f"drop_rate={drop:.4f}"))
+    return rows

@@ -1,0 +1,72 @@
+"""Paper tables/figures: Fig 7 (area), Fig 8 (energy), §V-C (speedup),
+§V-D (index overhead), Table II (pruning statistics).
+
+One simulation per dataset feeds all five artifacts; rows are emitted per
+figure so benchmarks/run.py prints one CSV line per paper artifact.
+
+Paper reference values (for the derived column comparisons):
+  area efficiency   4.67x / 5.20x / 4.16x   (CIFAR-10 / CIFAR-100 / ImageNet)
+  energy efficiency 2.13x / 2.15x / 1.98x
+  speedup           1.35x / 1.15x / 1.17x
+  index overhead    729.5KB / 1013.5KB / 990.6KB
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_dataset
+from repro.core.synthetic import (
+    TABLE_II,
+    network_sparsity,
+    network_zero_pattern_ratio,
+    synthesize_network,
+)
+
+PAPER = {
+    "cifar10": dict(area=4.67, energy=2.13, speedup=1.35, index_kb=729.5),
+    "cifar100": dict(area=5.20, energy=2.15, speedup=1.15, index_kb=1013.5),
+    "imagenet": dict(area=4.16, energy=1.98, speedup=1.17, index_kb=990.6),
+}
+
+
+def run() -> list[str]:
+    rows = []
+    for ds in ("cifar10", "cifar100", "imagenet"):
+        rep, us = timed(simulate_dataset, ds, seed=0)
+        s = rep.summary()
+        p = PAPER[ds]
+        rows.append(row(
+            f"fig7_area_{ds}", us,
+            f"ours={s['area_efficiency']:.2f}x paper={p['area']}x "
+            f"xbars={int(s['ours_crossbars'])}/{int(s['naive_crossbars'])}",
+        ))
+        rows.append(row(
+            f"fig8_energy_{ds}", us,
+            f"ours={s['energy_efficiency']:.2f}x paper={p['energy']}x",
+        ))
+        bd = rep.breakdown("ours")
+        total = sum(bd.values())
+        rows.append(row(
+            f"fig8_breakdown_{ds}", us,
+            f"adc={bd['adc_pj']/total:.0%} array={bd['array_pj']/total:.0%} "
+            f"dac={bd['dac_pj']/total:.0%}",
+        ))
+        rows.append(row(
+            f"sec5c_speedup_{ds}", us,
+            f"ours={s['speedup']:.2f}x paper={p['speedup']}x",
+        ))
+        rows.append(row(
+            f"sec5d_index_{ds}", us,
+            f"ours={s['index_overhead_kb']:.0f}KB paper={p['index_kb']}KB",
+        ))
+    # Table II statistics of the synthetic checkpoints
+    for ds in ("cifar10", "cifar100", "imagenet"):
+        (stats, layers), us = timed(synthesize_network, ds, seed=0)
+        rows.append(row(
+            f"table2_{ds}", us,
+            f"sparsity={network_sparsity(layers):.4f}"
+            f"(target {stats.sparsity}) "
+            f"zero_ratio={network_zero_pattern_ratio(layers):.3f}"
+            f"(target {stats.zero_pattern_ratio})",
+        ))
+    return rows

@@ -1,0 +1,59 @@
+"""Roofline table reader: aggregates experiments/dryrun/*.json (written by
+launch/dryrun.py) into per-(arch x shape) rows with the three roofline
+terms, the dominant bottleneck, and the MODEL_FLOPS/HLO_FLOPs ratio."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "single", include_sparse: bool = False):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        if bool(rec.get("sparse")) != include_sparse:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run() -> list[str]:
+    rows = []
+    for rec in load_cells("single"):
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        if rec["status"] == "skip":
+            rows.append(row(name, 0.0, "SKIP(sub-quadratic-only shape)"))
+            continue
+        if rec["status"] != "ok":
+            rows.append(row(name, 0.0, f"ERROR {rec.get('error','')[:60]}"))
+            continue
+        r = rec["roofline"]
+        ratio = rec.get("useful_flops_ratio")
+        bound = max(r, key=r.get)
+        step = max(r.values())
+        rows.append(row(
+            name,
+            rec.get("compile_s", 0) * 1e6,
+            f"bound={bound.split('_')[0]} step={step*1e3:.2f}ms "
+            f"c={r['compute_s']*1e3:.2f} m={r['memory_s']*1e3:.2f} "
+            f"x={r['collective_s']*1e3:.2f} "
+            f"useful={ratio:.2f}" if ratio else "useful=n/a",
+        ))
+    # multi-pod: prove the pod axis compiles everywhere
+    multi = load_cells("multi")
+    ok = sum(1 for r in multi if r["status"] == "ok")
+    skip = sum(1 for r in multi if r["status"] == "skip")
+    err = sum(1 for r in multi if r["status"] == "error")
+    rows.append(row("multipod_dryrun", 0.0,
+                    f"ok={ok} skip={skip} error={err}"))
+    return rows

@@ -1,0 +1,19 @@
+"""Shared benchmark helpers: timing + CSV row collection."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    """Returns (result, microseconds per call)."""
+    fn(*args, **kwargs)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,42 @@
+import os, sys, time, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.configs import get_config
+import signal
+
+mesh = make_production_mesh(multi_pod=False)
+base = get_config('deepseek_v2_236b', 'train_4k')
+
+class TO(Exception): pass
+def hdl(*a): raise TO()
+signal.signal(signal.SIGALRM, hdl)
+
+def probe(tag, cfg, budget=240):
+    t0=time.time()
+    try:
+        signal.alarm(budget)
+        built = build_step('deepseek_v2_236b', 'train_4k', mesh, cfg=cfg)
+        lowered = built.fn.lower(*built.args)
+        t1=time.time()
+        compiled = lowered.compile()
+        signal.alarm(0)
+        print(f'{tag}: lower {t1-t0:.0f}s compile {time.time()-t1:.0f}s', flush=True)
+    except TO:
+        print(f'{tag}: TIMEOUT >{budget}s', flush=True)
+    except Exception as e:
+        signal.alarm(0)
+        print(f'{tag}: ERROR {type(e).__name__}: {str(e)[:150]}', flush=True)
+
+r = dataclasses.replace
+# (c) tiny layer count, full MoE width
+probe('2-layer-160e', r(base, n_layers=2, layer_types=(('mla','mlp'),('mla','moe'))))
+# (a) full layers, 16 experts
+probe('60-layer-16e', r(base, moe=r(base.moe, n_experts=16)))
+# (b) full layers, 160e, top-2
+probe('60-layer-160e-top2', r(base, moe=r(base.moe, top_k=2)))
+# (e) no remat
+probe('60-layer-160e-noremat', r(base, remat=False))
+# full
+probe('60-layer-160e-full', base, budget=300)

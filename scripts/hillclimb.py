@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede all other imports — see launch/dryrun.py)
+
+"""§Perf hillclimb driver: lowers named variants of the three chosen cells
+and records their loop-aware roofline terms next to the baselines.
+
+  PYTHONPATH=src python scripts/hillclimb.py <variant> [...]
+
+Variants (hypothesis -> change; results land in experiments/perf/):
+  qwen_train_sparse          paper technique: block-pattern MLPs d=0.25
+  qwen_train_sparse_lean     + kmax_slack 1.5 -> 1.05 (fewer padded bricks)
+  qwen_train_sparse_d125     + density 0.125, 12 patterns
+  qwen_decode_flash          shard_map flash-decode (kill cache all-gather)
+  qwen_decode_flash_multi    same on the 2-pod mesh
+  whisper_train_scanenc      scanned encoder (baseline rerun after change)
+  whisper_train_dots         + remat policy dots_saveable (less recompute)
+"""
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.dryrun import collective_stats, roofline_terms
+from repro.launch.hlo_stats import parse_hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.models.layers import PatternSparseConfig
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+
+def lower_and_record(tag, arch, shape, cfg, multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    built = build_step(arch, shape, mesh, cfg=cfg)
+    lowered = built.fn.lower(*built.args)
+    compiled = lowered.compile()
+    st = parse_hlo_stats(compiled.as_text())
+    terms = roofline_terms(st.flops, st.bytes, st.collective_bytes, 0)
+    terms["memory_flashattn_s"] = (st.bytes - st.score_bytes) / 819e9
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "flops_per_device": st.flops,
+        "bytes_per_device": st.bytes,
+        "score_bytes_per_device": st.score_bytes,
+        "collective_bytes_per_device": st.collective_bytes,
+        "collective_counts": dict(st.collective_counts),
+        "roofline": terms,
+        "dominant": max(
+            {k: v for k, v in terms.items() if not k.startswith("memory_fl")},
+            key=terms.get,
+        ),
+        "step_lower_bound_s": max(
+            v for k, v in terms.items() if not k.startswith("memory_fl")
+        ),
+        "compile_s": round(time.time() - t0, 1),
+        "hbm_bytes": getattr(compiled.memory_analysis(),
+                             "temp_size_in_bytes", None),
+    }
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = terms
+    print(f"[{tag}] dom={rec['dominant']} "
+          f"c={r['compute_s']*1e3:.3f}ms m={r['memory_s']*1e3:.3f}ms "
+          f"x={r['collective_s']*1e3:.3f}ms "
+          f"(compile {rec['compile_s']}s)", flush=True)
+    return rec
+
+
+def variant(name):
+    r = dataclasses.replace
+    if name == "qwen_train_sparse":
+        cfg = get_config("qwen2_5_32b", "train_4k")
+        cfg = r(cfg, sparse=PatternSparseConfig(density=0.25, num_patterns=8))
+        return ("qwen2_5_32b", "train_4k", cfg, False)
+    if name == "qwen_train_sparse_lean":
+        cfg = get_config("qwen2_5_32b", "train_4k")
+        cfg = r(cfg, sparse=PatternSparseConfig(
+            density=0.25, num_patterns=8, kmax_slack=1.05))
+        return ("qwen2_5_32b", "train_4k", cfg, False)
+    if name == "qwen_train_sparse_d125":
+        cfg = get_config("qwen2_5_32b", "train_4k")
+        cfg = r(cfg, sparse=PatternSparseConfig(
+            density=0.125, num_patterns=12, kmax_slack=1.1))
+        return ("qwen2_5_32b", "train_4k", cfg, False)
+    if name == "qwen_decode_flash":
+        cfg = r(get_config("qwen2_5_32b", "decode_32k"),
+                decode_strategy="flash")
+        return ("qwen2_5_32b", "decode_32k", cfg, False)
+    if name == "qwen_decode_flash_multi":
+        cfg = r(get_config("qwen2_5_32b", "decode_32k"),
+                decode_strategy="flash")
+        return ("qwen2_5_32b", "decode_32k", cfg, True)
+    if name == "whisper_train_scanenc":
+        return ("whisper_small", "train_4k",
+                get_config("whisper_small", "train_4k"), False)
+    if name == "whisper_train_dots":
+        # remat policy change is baked via cfg.remat False: save everything
+        cfg = r(get_config("whisper_small", "train_4k"), remat=False)
+        return ("whisper_small", "train_4k", cfg, False)
+    raise SystemExit(f"unknown variant {name}")
+
+
+if __name__ == "__main__":
+    for name in sys.argv[1:]:
+        arch, shape, cfg, multi = variant(name)
+        lower_and_record(name, arch, shape, cfg, multi_pod=multi)

@@ -1,0 +1,134 @@
+"""Render the §Dry-run and §Roofline markdown tables from
+experiments/dryrun/*.json.  Usage:
+
+  PYTHONPATH=src python scripts/make_roofline_table.py [--mesh single]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCH_ORDER = [
+    "qwen2_5_32b", "granite_3_2b", "phi3_medium_14b", "h2o_danube_1_8b",
+    "whisper_small", "jamba_1_5_large_398b", "mamba2_780m",
+    "deepseek_v2_236b", "deepseek_v3_671b", "paligemma_3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(mesh, sparse=False):
+    recs = {}
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and bool(r.get("sparse", False)) == sparse:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def roofline_table(mesh="single", sparse=False):
+    recs = load(mesh, sparse)
+    lines = [
+        "| arch | shape | kind | compute (ms) | memory (ms) | collective (ms)"
+        " | dominant | step lower-bound (ms) | MODEL/HLO flops | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---|---|---|---|---|---|---|",
+            "|---|---|---|---:|---:|---:|---|---:|---:|---:|"),
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | - | SKIP "
+                    f"(full-attention, sub-quadratic required) | - | - | - |"
+                )
+                continue
+            if r["status"] != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | - | "
+                    f"ERROR {r.get('error','')[:40]} | - | - | - |"
+                )
+                continue
+            t = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            hbm = mem.get("bytes_per_device")
+            dom = r["dominant_term"].replace("_s", "")
+            lb = max(t.values()) * 1e3
+            ratio = r.get("useful_flops_ratio")
+            lines.append(
+                f"| {arch} | {shape} | {r['kind']} "
+                f"| {t['compute_s']*1e3:.3f} | {t['memory_s']*1e3:.3f} "
+                f"| {t['collective_s']*1e3:.3f} | **{dom}** | {lb:.3f} "
+                f"| {ratio:.2f} | {fmt_bytes(hbm)} |"
+                if ratio is not None else
+                f"| {arch} | {shape} | {r['kind']} "
+                f"| {t['compute_s']*1e3:.3f} | {t['memory_s']*1e3:.3f} "
+                f"| {t['collective_s']*1e3:.3f} | **{dom}** | {lb:.3f} "
+                f"| - | {fmt_bytes(hbm)} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_summary(mesh):
+    recs = load(mesh)
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skip")
+    err = sum(1 for r in recs.values() if r["status"] == "error")
+    lines = [f"mesh={mesh}: {ok} ok, {skip} documented skips, {err} errors"]
+    for (a, s), r in sorted(recs.items()):
+        if r["status"] == "error":
+            lines.append(f"  ERROR {a} {s}: {r.get('error','')[:150]}")
+    return "\n".join(lines)
+
+
+def collective_detail(mesh="single"):
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | AG | AR | RS | A2A | CP | total bytes |",
+        "|---|---|---:|---:|---:|---:|---:|---:|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if not r or r["status"] != "ok":
+                continue
+            c = r["collectives"]
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {c['all-gather']['count']} | {c['all-reduce']['count']} "
+                f"| {c['reduce-scatter']['count']} | {c['all-to-all']['count']}"
+                f" | {c['collective-permute']['count']} "
+                f"| {fmt_bytes(c['total_bytes'])} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--what", default="roofline",
+                    choices=["roofline", "summary", "collectives"])
+    ap.add_argument("--sparse", action="store_true")
+    args = ap.parse_args()
+    if args.what == "roofline":
+        print(roofline_table(args.mesh, args.sparse))
+    elif args.what == "collectives":
+        print(collective_detail(args.mesh))
+    else:
+        print(dryrun_summary("single"))
+        print(dryrun_summary("multi"))

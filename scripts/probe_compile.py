@@ -1,0 +1,18 @@
+"""Compile-time probe for a single (arch, shape, mesh) cell."""
+import os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+arch, shape = sys.argv[1], sys.argv[2]
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+mesh = make_production_mesh(multi_pod=multi)
+t0 = time.time()
+built = build_step(arch, shape, mesh)
+lowered = built.fn.lower(*built.args)
+t1 = time.time()
+print(f"lower {t1-t0:.1f}s", flush=True)
+compiled = lowered.compile()
+print(f"compile {time.time()-t1:.1f}s", flush=True)
+print("mem:", str(compiled.memory_analysis())[:200], flush=True)

@@ -1,0 +1,13 @@
+import os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod=False)
+built = build_step(arch, shape, mesh)
+lowered = built.fn.lower(*built.args)
+print("lowered ok", flush=True)
+t0 = time.time()
+compiled = lowered.compile()
+print("compile", round(time.time()-t0,1), flush=True)

@@ -1,0 +1,12 @@
+import os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod=False)
+t0 = time.time()
+built = build_step(arch, shape, mesh)
+print("built", round(time.time()-t0,1), flush=True)
+lowered = built.fn.lower(*built.args)
+print("lower", round(time.time()-t0,1), flush=True)

@@ -1,0 +1,28 @@
+import os, sys, time, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.configs import get_config
+
+variant = sys.argv[1]
+mesh = make_production_mesh(multi_pod=False)
+base = get_config('deepseek_v2_236b', 'train_4k')
+r = dataclasses.replace
+cfgs = {
+    '16e': r(base, moe=r(base.moe, n_experts=16)),
+    '160e-top2': r(base, moe=r(base.moe, top_k=2)),
+    'noremat': r(base, remat=False),
+    'nozero': base,  # handled via env flag below
+    'full': base,
+    '8layer': r(base, n_layers=8, layer_types=(('mla','mlp'),)+(('mla','moe'),)*7),
+    '20layer': r(base, n_layers=20, layer_types=(('mla','mlp'),)+(('mla','moe'),)*19),
+}
+cfg = cfgs[variant]
+t0 = time.time()
+built = build_step('deepseek_v2_236b', 'train_4k', mesh, cfg=cfg)
+lowered = built.fn.lower(*built.args)
+t1 = time.time()
+print(f"{variant}: lower {t1-t0:.0f}s", flush=True)
+compiled = lowered.compile()
+print(f"{variant}: compile {time.time()-t1:.0f}s", flush=True)

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+)

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_NAMES,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    runnable,
+    skip_reason,
+)

@@ -1,0 +1,112 @@
+"""Architecture + shape registry.
+
+Every assigned architecture has a module exporting:
+  config(shape: ShapeSpec|None) -> ModelConfig   (full published config)
+  smoke_config() -> ModelConfig                  (reduced, CPU-runnable)
+  extra_inputs(cfg, shape) -> dict[str, ShapeDtypeStruct]  (stub frontends)
+
+Shapes (assigned; seq_len x global_batch):
+  train_4k     4,096 x 256   training       -> train_step
+  prefill_32k  32,768 x 32   inference      -> prefill_step
+  decode_32k   32,768 x 128  inference      -> decode_step (1 new token,
+                                              KV cache of seq_len)
+  long_500k    524,288 x 1   long-context   -> decode_step; requires
+                                              sub-quadratic attention ->
+                                              runs only for ssm / hybrid /
+                                              SWA archs (DESIGN §4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ShapeSpec", "SHAPES", "ARCH_NAMES", "get_config",
+           "get_smoke_config", "input_specs", "runnable", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+ARCH_NAMES = [
+    "qwen2_5_32b",
+    "granite_3_2b",
+    "phi3_medium_14b",
+    "h2o_danube_1_8b",
+    "whisper_small",
+    "jamba_1_5_large_398b",
+    "mamba2_780m",
+    "deepseek_v2_236b",
+    "deepseek_v3_671b",
+    "paligemma_3b",
+]
+
+# archs with sub-quadratic sequence mixing -> long_500k runs
+_LONG_OK = {"jamba_1_5_large_398b", "mamba2_780m", "h2o_danube_1_8b"}
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str, shape: str | ShapeSpec | None = None):
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    return _module(arch).config(spec)
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).smoke_config()
+
+
+def runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in _LONG_OK
+    return True
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if runnable(arch, shape):
+        return None
+    return (
+        "long_500k requires sub-quadratic attention; "
+        f"{arch} is a pure full-attention architecture (DESIGN §4)"
+    )
+
+
+def input_specs(arch: str, shape: str | ShapeSpec, cfg=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step function
+    this (arch, shape) lowers — no device allocation."""
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    cfg = cfg or get_config(arch, spec)
+    mod = _module(arch)
+    b, s = spec.global_batch, spec.seq_len
+    # VLM: seq_len is the *total* backbone context; the patch-embedding
+    # prefix (stub frontend) takes prefix_len of it, text takes the rest.
+    s_text = s - (cfg.prefix_len or 0)
+    out: dict = {}
+    if spec.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text + 1), jnp.int32)
+    elif spec.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    else:  # decode: one new token against a cache of seq_len
+        out["tokens"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if hasattr(mod, "extra_inputs"):
+        out.update(mod.extra_inputs(cfg, spec))
+    return out

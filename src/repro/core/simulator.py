@@ -1,0 +1,321 @@
+"""End-to-end accelerator simulation: area / energy / cycles (paper §V).
+
+Compares, per layer and aggregated:
+
+  naive   — Fig-1 mapping (filters as columns, zeros stored), OU mechanism,
+            no input preprocessing -> no activation-sparsity skipping.
+  pattern — kernel-reordering mapping (this paper): compressed pattern
+            blocks, OU limited to a block, input preprocessing selects only
+            the pattern's activations and skips all-zero selections.
+
+Metrics:
+  area   — crossbar count (Fig 7: 'crossbar array numbers').
+  energy — sum over OU activations of Table-I component energies, weighted
+           by windows and by the expected non-skip probability (Fig 8).
+  cycles — layers execute sequentially, crossbars within a layer in
+           parallel, one OU activation per crossbar per cycle: cycles =
+           windows * max over crossbars of expected OU activations (§V-C).
+
+Activation zero statistics come from an actual forward pass of the network
+(im2col convs + ReLU, unit-variance renormalisation standing in for BN),
+sampled at ``n_windows`` output positions per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.crossbar import EnergyModel
+from repro.core.indexing import build_index_stream, index_overhead_bits
+from repro.core.mapping import CrossbarConfig, map_layer, map_layer_naive
+from repro.core.ou import OUSchedule, naive_ou_schedule, pattern_ou_schedule
+from repro.core.patterns import bits_to_mask
+from repro.core.synthetic import (
+    SyntheticLayer,
+    TABLE_II,
+    synthesize_network,
+)
+
+__all__ = [
+    "LayerResult",
+    "SimulationReport",
+    "simulate_network",
+    "simulate_dataset",
+    "forward_zero_stats",
+]
+
+
+# ---------------------------------------------------------------------------
+# activation statistics
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: np.ndarray, k: int = 3, pad: int = 1) -> np.ndarray:
+    """x: [B, C, H, W] -> patches [B, H, W, C, k*k] (stride 1, 'same')."""
+    b, c, h, w = x.shape
+    xp = np.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    out = np.empty((b, h, w, c, k * k), dtype=x.dtype)
+    idx = 0
+    for dy in range(k):
+        for dx in range(k):
+            out[..., idx] = xp[:, :, dy : dy + h, dx : dx + w].transpose(0, 2, 3, 1)
+            idx += 1
+    return out
+
+
+def forward_zero_stats(
+    layers: list[SyntheticLayer],
+    input_hw: int,
+    batch: int = 2,
+    n_windows: int = 256,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Forward random inputs through the synthetic net; return, per layer,
+    a boolean zero-indicator array [n_windows, C_in, 9] over sampled output
+    positions of that layer's input patches."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(batch, layers[0].spec.c_in, input_hw, input_hw)).astype(
+        np.float32
+    )
+    # first layer input is an image: no ReLU zeros, but keep the real stats
+    stats: list[np.ndarray] = []
+    hw = input_hw
+    for i, layer in enumerate(layers):
+        spec = layer.spec
+        patches = _im2col(x)  # [B, H, W, C, 9]
+        b, h, w_, c, kk = patches.shape
+        flat = patches.reshape(b * h * w_, c, kk)
+        take = min(n_windows, flat.shape[0])
+        sel = rng.choice(flat.shape[0], size=take, replace=False)
+        stats.append(flat[sel] == 0.0)
+
+        wmat = layer.weights.reshape(spec.c_out, spec.c_in * kk).T  # [C*9, C_out]
+        y = flat.reshape(b * h * w_, c * kk) @ wmat
+        y = y.reshape(b, h, w_, spec.c_out).transpose(0, 3, 1, 2)
+        std = y.std()
+        y = y / (std if std > 0 else 1.0)  # BN stand-in
+        y = np.maximum(y, 0.0)  # ReLU
+        # pool when the *next* layer's spatial size shrinks
+        if i + 1 < len(layers) and layers[i + 1].spec.out_hw < spec.out_hw:
+            b2, c2, h2, w2 = y.shape
+            y = y[:, :, : h2 // 2 * 2, : w2 // 2 * 2]
+            y = y.reshape(b2, c2, h2 // 2, 2, w2 // 2, 2).max(axis=(3, 5))
+        x = y.astype(np.float32)
+        hw = x.shape[-1]
+    return stats
+
+
+def _skip_fractions(
+    sched: OUSchedule, zero_ind: np.ndarray | None
+) -> np.ndarray:
+    """Expected all-zero-input fraction per OU (0 if no stats / channel=-1)."""
+    n = len(sched)
+    if zero_ind is None or n == 0:
+        return np.zeros(n)
+    skip = np.zeros(n)
+    # group by (channel, pattern) — few unique pairs per layer
+    pairs = {}
+    for i in range(n):
+        ch, pat = int(sched.channel[i]), int(sched.pattern[i])
+        if ch < 0:
+            continue
+        pairs.setdefault((ch, pat), []).append(i)
+    k = zero_ind.shape[-1]
+    for (ch, pat), idxs in pairs.items():
+        if ch >= zero_ind.shape[1]:
+            continue
+        pos = np.nonzero(bits_to_mask(pat, k))[0]
+        if pos.size == 0:
+            frac = 1.0
+        else:
+            frac = float(np.all(zero_ind[:, ch, pos], axis=1).mean())
+        skip[idxs] = frac
+    return skip
+
+
+# ---------------------------------------------------------------------------
+# per-layer simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerResult:
+    name: str
+    windows: int
+    naive_crossbars: int
+    ours_crossbars: int
+    naive_energy_pj: float
+    ours_energy_pj: float
+    naive_cycles: float
+    ours_cycles: float
+    naive_breakdown: dict[str, float]
+    ours_breakdown: dict[str, float]
+    index_bits: int
+    stored_kernels: int
+    total_kernels: int
+    utilization: float
+
+
+def _sched_energy_cycles(
+    sched: OUSchedule,
+    skip: np.ndarray,
+    windows: int,
+    energy: EnergyModel,
+) -> tuple[float, float, dict[str, float]]:
+    live = 1.0 - skip
+    e_per = energy.ou_energy(sched.wordlines, sched.bitlines)
+    total_e = float((e_per * live).sum()) * windows
+    breakdown = energy.breakdown(sched.wordlines, sched.bitlines, live)
+    breakdown = {k: v * windows for k, v in breakdown.items()}
+    if len(sched) == 0:
+        return 0.0, 0.0, breakdown
+    per_xbar = np.bincount(
+        sched.crossbar, weights=live, minlength=sched.num_crossbars
+    )
+    cycles = float(per_xbar.max()) * windows
+    return total_e, cycles, breakdown
+
+
+def simulate_layer(
+    layer: SyntheticLayer,
+    zero_ind: np.ndarray | None,
+    config: CrossbarConfig = CrossbarConfig(),
+    energy: EnergyModel = EnergyModel(),
+    naive_skips: bool = False,
+) -> LayerResult:
+    spec = layer.spec
+    windows = spec.out_hw * spec.out_hw
+
+    mapping = map_layer(layer.pattern_bits, config, spec.kernel_size)
+    sched_ours = pattern_ou_schedule(mapping)
+    skip_ours = _skip_fractions(sched_ours, zero_ind)
+    e_ours, cyc_ours, bd_ours = _sched_energy_cycles(
+        sched_ours, skip_ours, windows, energy
+    )
+
+    naive = map_layer_naive(spec.c_out, spec.c_in, spec.kernel_size, config)
+    sched_nv = naive_ou_schedule(naive)
+    skip_nv = (
+        _skip_fractions(sched_nv, zero_ind)
+        if naive_skips
+        else np.zeros(len(sched_nv))
+    )
+    e_nv, cyc_nv, bd_nv = _sched_energy_cycles(sched_nv, skip_nv, windows, energy)
+
+    stream = build_index_stream(mapping)
+    idx = index_overhead_bits(stream)
+
+    return LayerResult(
+        name=spec.name,
+        windows=windows,
+        naive_crossbars=naive.num_crossbars,
+        ours_crossbars=mapping.num_crossbars,
+        naive_energy_pj=e_nv,
+        ours_energy_pj=e_ours,
+        naive_cycles=cyc_nv,
+        ours_cycles=cyc_ours,
+        naive_breakdown=bd_nv,
+        ours_breakdown=bd_ours,
+        index_bits=idx["total_bits"],
+        stored_kernels=mapping.stored_kernels,
+        total_kernels=mapping.total_kernels,
+        utilization=mapping.utilization,
+    )
+
+
+@dataclasses.dataclass
+class SimulationReport:
+    dataset: str
+    layers: list[LayerResult]
+
+    def _sum(self, attr: str) -> float:
+        return float(sum(getattr(l, attr) for l in self.layers))
+
+    @property
+    def area_efficiency(self) -> float:
+        return self._sum("naive_crossbars") / max(self._sum("ours_crossbars"), 1)
+
+    @property
+    def crossbar_savings(self) -> float:
+        return 1.0 - self._sum("ours_crossbars") / max(
+            self._sum("naive_crossbars"), 1
+        )
+
+    @property
+    def energy_efficiency(self) -> float:
+        return self._sum("naive_energy_pj") / max(self._sum("ours_energy_pj"), 1e-9)
+
+    @property
+    def speedup(self) -> float:
+        return self._sum("naive_cycles") / max(self._sum("ours_cycles"), 1e-9)
+
+    @property
+    def index_overhead_kb(self) -> float:
+        return self._sum("index_bits") / 8.0 / 1024.0
+
+    def breakdown(self, which: str) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for l in self.layers:
+            for k, v in getattr(l, f"{which}_breakdown").items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "area_efficiency": self.area_efficiency,
+            "crossbar_savings": self.crossbar_savings,
+            "energy_efficiency": self.energy_efficiency,
+            "speedup": self.speedup,
+            "index_overhead_kb": self.index_overhead_kb,
+            "naive_crossbars": self._sum("naive_crossbars"),
+            "ours_crossbars": self._sum("ours_crossbars"),
+        }
+
+
+def simulate_network(
+    dataset: str,
+    layers: list[SyntheticLayer],
+    input_hw: int,
+    config: CrossbarConfig = CrossbarConfig(),
+    energy: EnergyModel = EnergyModel(),
+    naive_skips: bool = False,
+    n_windows: int = 256,
+    stats_hw: int | None = None,
+    batch: int = 2,
+    seed: int = 0,
+) -> SimulationReport:
+    """Simulate all layers; ``stats_hw`` can downscale the forward pass used
+    for activation statistics (window *counts* always use the true size)."""
+    stats = forward_zero_stats(
+        layers, stats_hw or input_hw, batch=batch, n_windows=n_windows, seed=seed
+    )
+    results = [
+        simulate_layer(layer, zi, config, energy, naive_skips)
+        for layer, zi in zip(layers, stats)
+    ]
+    return SimulationReport(dataset=dataset, layers=results)
+
+
+def simulate_dataset(
+    dataset: str,
+    seed: int = 0,
+    naive_skips: bool = False,
+    config: CrossbarConfig = CrossbarConfig(),
+    stats_hw: int | None = None,
+) -> SimulationReport:
+    """Synthesize the Table-II-matched network for ``dataset`` and simulate."""
+    stats, layers = synthesize_network(dataset, seed=seed)
+    if stats_hw is None and dataset == "imagenet":
+        stats_hw = 112  # forward-pass downscale for CPU time; counts use 224
+    return simulate_network(
+        dataset,
+        layers,
+        stats.input_hw,
+        config=config,
+        naive_skips=naive_skips,
+        stats_hw=stats_hw,
+        batch=1 if dataset == "imagenet" else 2,
+        seed=seed,
+    )

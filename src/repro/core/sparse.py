@@ -1,0 +1,231 @@
+"""TPU-native block-pattern sparse matmul layer (hardware adaptation, DESIGN §3).
+
+The paper's pipeline — pattern dictionary -> kernel reordering -> zero
+compression -> OU-granular dense compute -> index-driven select/reorder —
+re-expressed at MXU granularity:
+
+  * the contraction dimension K is split into 128-row *blocks*;
+  * every output column gets a *block mask* (which blocks are nonzero),
+    constrained to a small per-layer dictionary (pattern pruning);
+  * output columns are permuted so equal-mask columns are adjacent
+    (kernel reordering) and grouped into 128-column *tiles*;
+  * weights are stored compressed: only the nonzero blocks of each tile,
+    as dense [block, tile] bricks (zero-row compression);
+  * compute walks, per output tile, only its nonzero blocks via a
+    prefetched ``block_ids`` table — the Input Preprocessing Unit becomes
+    an index map, the OU becomes the MXU tile (kernels/pattern_spmm.py);
+  * results are un-permuted by the stored inverse permutation
+    (Output Indexing Unit).
+
+FLOPs and weight bytes drop by exactly the block density.  This module
+holds the layout builder, the XLA reference execution path (used by the
+distributed dry-run — Pallas TPU kernels don't lower on the CPU backend),
+and the projection ("pattern pruning") of dense weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockPatternWeight",
+    "build_block_pattern",
+    "pattern_spmm_xla",
+    "block_density",
+]
+
+
+@dataclasses.dataclass
+class BlockPatternWeight:
+    """Compressed block-pattern weight for y = x @ W, W: [K, N].
+
+    Attributes:
+      w_comp:     [n_tiles, k_max, block, tile] — dense bricks, zero padded.
+      block_ids:  [n_tiles, k_max] int32 — which K-block each brick is;
+                  padded entries point at block 0 with zero weights.
+      nnz:        [n_tiles] int32 — valid bricks per tile.
+      new_order:  [N] int32 — column permutation (new position -> original).
+      inv_order:  [N] int32 — inverse permutation (original -> new).
+      k_in, n_out, block, tile: geometry.
+      dict_masks: [P, n_blocks] bool — the layer's pattern dictionary.
+    """
+
+    w_comp: jax.Array
+    block_ids: jax.Array
+    nnz: np.ndarray
+    new_order: np.ndarray
+    inv_order: np.ndarray
+    k_in: int
+    n_out: int
+    block: int
+    tile: int
+    dict_masks: np.ndarray
+
+    @property
+    def n_tiles(self) -> int:
+        return self.w_comp.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.w_comp.shape[1]
+
+    def dense(self) -> jax.Array:
+        """Reconstruct the dense [K, N] weight (testing oracle)."""
+        nb = self.k_in // self.block
+        w = np.zeros((nb, self.block, self.n_out), np.float64)
+        wc = np.asarray(self.w_comp, np.float64)
+        ids = np.asarray(self.block_ids)
+        for t in range(self.n_tiles):
+            for k in range(int(self.nnz[t])):
+                cols = slice(t * self.tile, (t + 1) * self.tile)
+                w[ids[t, k], :, cols] += wc[t, k]
+        w = w.reshape(self.k_in, self.n_out)
+        # undo the column permutation
+        out = np.zeros_like(w)
+        out[:, self.new_order] = w
+        return jnp.asarray(out)
+
+
+def block_density(bp: BlockPatternWeight) -> float:
+    """Fraction of K-blocks kept (= FLOP / weight-byte ratio vs dense)."""
+    n_blocks = bp.k_in // bp.block
+    return float(np.sum(bp.nnz)) / (bp.n_tiles * n_blocks)
+
+
+def _project_masks_to_dictionary(
+    masks: np.ndarray, energies: np.ndarray, num_patterns: int
+) -> np.ndarray:
+    """Pattern pruning of block masks.
+
+    masks: [N, nB] bool (desired per-column block masks),
+    energies: [N, nB] block L2^2 (for energy-weighted projection).
+
+    Returns projected masks [N, nB], each row one of <= num_patterns
+    dictionary masks (plus the all-zero mask).
+    """
+    n, nb = masks.shape
+    # PDF over observed masks
+    keys = [m.tobytes() for m in masks]
+    uniq: dict[bytes, int] = {}
+    for k in keys:
+        uniq[k] = uniq.get(k, 0) + 1
+    ranked = sorted(uniq.items(), key=lambda kv: -kv[1])[:num_patterns]
+    cand = np.stack(
+        [np.frombuffer(k, dtype=bool).copy() for k, _ in ranked]
+    )  # [P, nB]
+    # project every column to the candidate keeping the most energy,
+    # breaking ties toward the smaller pattern
+    kept = energies @ cand.T.astype(np.float64)  # [N, P]
+    sizes = cand.sum(-1)  # [P]
+    score = kept - 1e-12 * sizes[None, :]
+    choice = np.argmax(score, axis=1)
+    return cand[choice]
+
+
+def build_block_pattern(
+    w: np.ndarray,
+    num_patterns: int = 8,
+    density: float = 0.25,
+    block: int = 128,
+    tile: int = 128,
+) -> BlockPatternWeight:
+    """Pattern-prune + reorder + compress a dense [K, N] weight.
+
+    Steps mirror the paper's flowchart (Fig 3) at block granularity:
+    magnitude-driven block masks -> mask PDF -> top-P dictionary ->
+    projection -> column reordering -> zero compression.
+    """
+    w = np.asarray(w, np.float32)
+    k_in, n_out = w.shape
+    if k_in % block or n_out % tile:
+        raise ValueError(f"weight {w.shape} not divisible by ({block},{tile})")
+    nb = k_in // block
+    keep = max(1, int(np.ceil(density * nb)))
+
+    energies = (w.reshape(nb, block, n_out) ** 2).sum(1).T  # [N, nB]
+    order = np.argsort(-energies, axis=1)
+    masks = np.zeros((n_out, nb), bool)
+    np.put_along_axis(masks, order[:, :keep], True, axis=1)
+
+    masks = _project_masks_to_dictionary(masks, energies, num_patterns)
+
+    # kernel reordering: group equal masks (lexicographic by mask bytes)
+    mask_keys = np.array([m.tobytes() for m in masks])
+    new_order = np.argsort(mask_keys, kind="stable").astype(np.int32)
+    inv_order = np.argsort(new_order).astype(np.int32)
+    masks_sorted = masks[new_order]
+    w_sorted = w[:, new_order]
+
+    n_tiles = n_out // tile
+    tile_masks = masks_sorted.reshape(n_tiles, tile, nb).any(axis=1)  # [T, nB]
+    nnz = tile_masks.sum(-1).astype(np.int32)
+    k_max = max(int(nnz.max()), 1)
+
+    w_blocks = w_sorted.reshape(nb, block, n_tiles, tile)
+    w_comp = np.zeros((n_tiles, k_max, block, tile), np.float32)
+    block_ids = np.zeros((n_tiles, k_max), np.int32)
+    for t in range(n_tiles):
+        ids = np.nonzero(tile_masks[t])[0]
+        for j, bid in enumerate(ids):
+            # zero out the entries this tile's columns masked off
+            colmask = masks_sorted[t * tile : (t + 1) * tile, bid]  # [tile]
+            w_comp[t, j] = w_blocks[bid, :, t, :] * colmask[None, :]
+            block_ids[t, j] = bid
+
+    dict_masks = np.unique(masks, axis=0)
+    return BlockPatternWeight(
+        w_comp=jnp.asarray(w_comp),
+        block_ids=jnp.asarray(block_ids),
+        nnz=nnz,
+        new_order=new_order,
+        inv_order=inv_order,
+        k_in=k_in,
+        n_out=n_out,
+        block=block,
+        tile=tile,
+        dict_masks=dict_masks,
+    )
+
+
+def pattern_spmm_xla(
+    x: jax.Array,
+    w_comp: jax.Array,
+    block_ids: jax.Array,
+    block: int,
+    unpermute: jax.Array | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """XLA execution of the compressed matmul: y = x @ W_compressed.
+
+    x: [..., K]; w_comp: [T, k_max, block, tile]; block_ids: [T, k_max].
+    Walks the k_max brick slots with a scan; each step gathers the needed
+    x-block per tile (the 'input preprocessing unit') and does a dense
+    [M, block] @ [block, tile] per tile.  Padded slots have zero weights.
+    """
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k_in = x.shape[-1]
+    m = int(np.prod(lead)) if lead else 1
+    xb = x.reshape(m, k_in // block, block)
+    t, k_max, _, tile = w_comp.shape
+
+    def step(acc, slot):
+        ids, w_slot = slot  # ids: [T], w_slot: [T, block, tile]
+        xg = jnp.take(xb, ids, axis=1)  # [M, T, block]
+        acc = acc + jnp.einsum(
+            "mtb,tbn->mtn", xg, w_slot, preferred_element_type=jnp.float32
+        )
+        return acc, None
+
+    acc0 = jnp.zeros((m, t, tile), jnp.float32)
+    acc, _ = jax.lax.scan(
+        step, acc0, (block_ids.T, jnp.swapaxes(w_comp, 0, 1))
+    )
+    y = acc.reshape(m, t * tile)
+    if unpermute is not None:
+        y = jnp.take(y, unpermute, axis=1)
+    return y.reshape(*lead, t * tile).astype(out_dtype)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: chunked causal attention with online softmax.
+
+Needed because the assigned inference shapes (prefill_32k, long_500k) make
+materialised [S, S] score matrices impossible: at S = 32k, bf16 scores per
+head are 2 GiB.  The kernel streams KV tiles through VMEM, carrying the
+running max / denominator / accumulator (Flash-Attention-2 schedule).
+
+Grid: (batch*q_heads, q_tiles, kv_tiles), kv innermost.  Causal kv tiles
+strictly above the diagonal are skipped with ``pl.when`` (no FLOPs, no
+DMA-to-MXU dependency).  Sliding-window masking (h2o-danube) folds into the
+same mask.  GQA is handled by the ops.py wrapper (kv head broadcast via
+index_map — no materialised repeat).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, kv_len, bq, bk, lanes):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_hi = (iq + 1) * bq - 1  # last query position in this tile
+    k_lo = jk * bk  # first key position in this tile
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len  # padded keys never win the softmax
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if causal:
+        # skip kv tiles strictly in the future of every query in the tile
+        pl.when(k_lo <= q_hi)(_body)
+    else:
+        _body()
+
+    @pl.when(jk == nk - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[0, ...] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "kv_len", "bq", "bk", "interpret", "scale"
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [BH, S, D]
+    k: jax.Array,  # [BH, S, D]
+    v: jax.Array,  # [BH, S, D]
+    scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    kv_len = kv_len if kv_len is not None else sk
+    grid = (bh, pl.cdiv(sq, bq), pl.cdiv(sk, bk))
+    lanes = 128
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, kv_len=kv_len,
+        bq=bq, bk=bk, lanes=lanes,
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, lanes), jnp.float32),
+            pltpu.VMEM((bq, lanes), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )
+    return fn(q, k, v)

@@ -1,0 +1,124 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op dispatches between:
+  * the Pallas TPU kernel (``backend='pallas'`` — real TPU, or
+    ``interpret=True`` on CPU for validation), and
+  * the XLA fallback (``backend='xla'``) used by the CPU dry-run, where
+    TPU Pallas kernels cannot lower.
+
+Dispatch default: Pallas on TPU devices, XLA elsewhere.  Shapes are padded
+to tile multiples here so kernels only see aligned sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BlockPatternWeight, pattern_spmm_xla
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ou_mvm import ou_mvm_pallas
+from repro.kernels.pattern_spmm import pattern_spmm_pallas
+
+__all__ = ["default_backend", "pattern_spmm", "flash_attention", "ou_mvm"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pattern_spmm(
+    x: jax.Array,
+    bp: BlockPatternWeight,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    bm: int = 128,
+) -> jax.Array:
+    """y = x @ W for a block-pattern compressed weight.  x: [..., K]."""
+    backend = backend or default_backend()
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    if backend == "pallas":
+        interp = (
+            interpret if interpret is not None else jax.default_backend() != "tpu"
+        )
+        m = xm.shape[0]
+        xp = _pad_to(xm, 0, bm)
+        y = pattern_spmm_pallas(
+            xp, bp.w_comp, bp.block_ids, block=bp.block, bm=bm, interpret=interp
+        )[:m]
+    elif backend == "xla":
+        y = pattern_spmm_xla(xm, bp.w_comp, bp.block_ids, bp.block)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)
+    return y.reshape(*lead, bp.n_out).astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    bq: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """GQA flash attention.  Returns [B, Hq, Sq, D]."""
+    backend = backend or default_backend()
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    # fold GQA: repeat kv heads (logical; XLA keeps this as a broadcast
+    # until the kernel boundary)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, sk, d)
+    vf = v.reshape(b * hq, sk, d)
+    if backend == "pallas":
+        interp = (
+            interpret if interpret is not None else jax.default_backend() != "tpu"
+        )
+        qp = _pad_to(qf, 1, bq)
+        kp = _pad_to(kf, 1, bk)
+        vp = _pad_to(vf, 1, bk)
+        out = flash_attention_pallas(
+            qp, kp, vp, scale=scale, causal=causal, window=window,
+            kv_len=sk, bq=bq, bk=bk, interpret=interp,
+        )[:, :sq]
+    elif backend == "xla":
+        out = ref.flash_attention_ref(
+            qf, kf, vf, scale=scale, causal=causal, window=window
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out.reshape(b, hq, sq, d)
+
+
+def ou_mvm(
+    x: jax.Array,
+    w: jax.Array,
+    ou_rows: int = 9,
+    ou_cols: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paper-faithful OU-granular MVM with all-zero input skip."""
+    return ou_mvm_pallas(x, w, ou_rows=ou_rows, ou_cols=ou_cols, interpret=interpret)

@@ -1,0 +1,85 @@
+"""Pallas kernel: OU-granular crossbar matrix-vector multiply (paper-faithful).
+
+Executes y = x @ W exactly the way the paper's accelerator does: the
+crossbar is walked in Operation Units of ``ou_rows x ou_cols`` cells, one
+OU per grid step, accumulating bitline partial sums — and *skipping* OUs
+whose selected input slice is all zero, which is the paper's Input
+Preprocessing Unit all-zero detection (§IV-A).  The skip is numerically
+lossless (a zero input slice contributes nothing), which tests assert.
+
+This kernel is a fidelity artifact: the 9x8 OU is far below the TPU's
+native (8,128) tile, so it is validated in interpret mode (and documented
+as such).  The *performant* TPU expression of the same idea is
+pattern_spmm.py, where the OU is the 128x128 MXU tile.  ``nonzero`` flags
+are scalar-prefetched — exactly the role of the paper's control unit
+signal path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ou_mvm_pallas"]
+
+
+def _kernel(flags_ref, x_ref, w_ref, o_ref):
+    band = pl.program_id(0)
+
+    @pl.when(band == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(flags_ref[band] != 0)  # all-zero input detection -> skip OU
+    def _accumulate():
+        x = x_ref[...].astype(jnp.float32)  # [ou_rows]
+        w = w_ref[...].astype(jnp.float32)  # [ou_rows, ou_cols]
+        o_ref[...] += x @ w
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ou_rows", "ou_cols", "interpret")
+)
+def ou_mvm_pallas(
+    x: jax.Array,  # [R]
+    w: jax.Array,  # [R, C]
+    ou_rows: int = 9,
+    ou_cols: int = 8,
+    interpret: bool = True,
+):
+    r, c = w.shape
+    assert x.shape == (r,)
+    n_bands = pl.cdiv(r, ou_rows)
+    n_groups = pl.cdiv(c, ou_cols)
+    pad_r = n_bands * ou_rows - r
+    pad_c = n_groups * ou_cols - c
+    xp = jnp.pad(x, (0, pad_r))
+    wp = jnp.pad(w, ((0, pad_r), (0, pad_c)))
+
+    # control-unit signal: per input band, is any activation nonzero?
+    flags = (
+        jnp.any(xp.reshape(n_bands, ou_rows) != 0, axis=1).astype(jnp.int32)
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bands, n_groups),
+        in_specs=[
+            pl.BlockSpec((ou_rows,), lambda i, j, flags: (i,)),
+            pl.BlockSpec((ou_rows, ou_cols), lambda i, j, flags: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((ou_cols,), lambda i, j, flags: (j,)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_groups * ou_cols,), jnp.float32),
+        interpret=interpret,
+        name="ou_mvm",
+    )
+    y = fn(flags, xp, wp)
+    return y[:c]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pattern_spmm_ref", "flash_attention_ref", "ou_mvm_ref"]
+
+
+def pattern_spmm_ref(
+    x: jax.Array, w_comp: jax.Array, block_ids: jax.Array, block: int
+) -> jax.Array:
+    """y = x @ W_compressed, naive loops.  x: [M, K] -> y: [M, T*tile]."""
+    m, k_in = x.shape
+    t, k_max, _, tile = w_comp.shape
+    xb = x.reshape(m, k_in // block, block)
+    cols = []
+    for ti in range(t):
+        acc = jnp.zeros((m, tile), jnp.float32)
+        for k in range(k_max):
+            xs = xb[:, block_ids[ti, k]]
+            acc = acc + xs.astype(jnp.float32) @ w_comp[ti, k].astype(jnp.float32)
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=1).astype(x.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BH, Sk, D]
+    v: jax.Array,  # [BH, Sk, D]
+    scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    sq, sk = s.shape[-2], s.shape[-1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ou_mvm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain dense MVM — the OU walk and the all-zero skip are exact."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder devices for the
+# production meshes.  (Smoke tests / benches never import this module.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * builds the jitted step (train/prefill/decode) with full production
+    shardings (launch/steps.py),
+  * ``.lower().compile()`` against ShapeDtypeStructs — no allocation,
+  * records memory_analysis (fits-in-HBM proof), cost_analysis (FLOPs /
+    bytes), and the collective schedule: every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute op in the optimized
+    HLO with summed operand bytes (cost_analysis has no collective bytes),
+  * derives the three roofline terms (EXPERIMENTS.md §Roofline):
+      compute   = FLOPs / (chips * 197e12)
+      memory    = bytes / (chips * 819e9)
+      collective= collective_bytes / (chips * 50e9 * links)
+  * writes experiments/dryrun/<arch>__<shape>__<mesh>.json (idempotent:
+    existing cells are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun [--arch A] [--shape S] [--mesh single|multi]
+                                [--force] [--list]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, SHAPES, runnable, skip_reason
+from repro.launch.hlo_stats import parse_hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.models.transformer import model_flops_per_token
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+ICI_LINKS = 4  # 2D torus links per chip usable concurrently
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64|c64)\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8, "c64": 8}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the optimized HLO."""
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # ops look like: %name = TYPE[shape] all-gather(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for coll in _COLLECTIVES:
+            if re.search(rf"\b{coll}(-start|-done)?\(", rhs):
+                if f"{coll}-done(" in rhs:
+                    break  # counted at -start
+                shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+                nbytes = 0
+                for dt, dims in shapes:
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _BYTES.get(dt, 4)
+                out[coll]["count"] += 1
+                out[coll]["bytes"] += nbytes
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   chips: int, per_device: bool = True) -> dict:
+    """Roofline terms in seconds.  ``per_device=True`` when the inputs come
+    from the per-device SPMD program (hlo_stats parser)."""
+    div = 1 if per_device else chips
+    return {
+        "compute_s": flops / (div * PEAK_FLOPS),
+        "memory_s": bytes_ / (div * HBM_BW),
+        "collective_s": coll_bytes / (div * ICI_BW * ICI_LINKS),
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False, sparse: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape}__{mesh_name}" + ("__sparse" if sparse else "")
+    path = os.path.join(out_dir, f"{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "sparse": sparse, "status": "skip"}
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec["skip_reason"] = reason
+        _write(path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        built = build_step(arch, shape, mesh, sparse=sparse)
+        lowered = built.fn.lower(*built.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)  # per-appearance counts (no loop mult)
+
+        # Loop-aware per-device statistics (cost_analysis counts while
+        # bodies once and misses scan trip counts — see hlo_stats.py).
+        st = parse_hlo_stats(hlo)
+        flops = st.flops
+        bytes_ = st.bytes
+        coll = {
+            k: {"count": int(st.collective_counts.get(k, 0)),
+                "bytes": float(st.collective_bytes_by_kind.get(k, 0.0))}
+            for k in _COLLECTIVES
+        }
+        coll["total_bytes"] = float(st.collective_bytes)
+        coll["total_count"] = int(sum(st.collective_counts.values()))
+        coll["while_trips"] = st.while_trips[:16]
+        spec = SHAPES[shape]
+        tokens = (
+            spec.global_batch * spec.seq_len
+            if spec.kind in ("train", "prefill")
+            else spec.global_batch
+        )
+        # model_flops_per_token is 6N (train fwd+bwd); fwd-only steps = 2N
+        mf = model_flops_per_token(built.cfg)
+        model_flops = mf * tokens if spec.kind == "train" else mf / 3.0 * tokens
+
+        rec.update(
+            status="ok",
+            chips=chips,
+            kind=built.kind,
+            n_params=built.meta.get("n_params"),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            tokens=tokens,
+            hlo_flops_per_device=flops,
+            hlo_bytes_per_device=bytes_,
+            cost_analysis_flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+            collectives=coll,
+            memory_analysis={
+                "bytes_per_device": getattr(
+                    mem, "temp_size_in_bytes", None
+                ),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "repr": str(mem)[:2000],
+            },
+            model_flops=model_flops,
+            roofline=roofline_terms(flops, bytes_, coll["total_bytes"], chips),
+        )
+        terms = rec["roofline"]
+        dom = max(terms, key=terms.get)
+        rec["dominant_term"] = dom
+        rec["useful_flops_ratio"] = (
+            model_flops / (flops * chips) if flops else None
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sparse", action="store_true",
+                    help="enable the paper's block-pattern sparse MLPs")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(OUT_DIR)
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                print(a, s, "runnable" if runnable(a, s) else "SKIP")
+        return
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(a, s, mp, out_dir, force=args.force,
+                               sparse=args.sparse)
+                dt = time.time() - t0
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f"dom={rec['dominant_term']} "
+                        f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                        f"x={r['collective_s']:.2e}"
+                    )
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(
+                    f"[{status:5}] {a:22} {s:12} "
+                    f"{'multi' if mp else 'single':6} {dt:7.1f}s {extra}",
+                    flush=True,
+                )
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

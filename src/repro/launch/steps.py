@@ -1,0 +1,295 @@
+"""Step-function builders shared by dryrun.py / train.py / serve.py.
+
+Everything here is AOT-friendly: given an (arch, shape, mesh) it produces
+  * the jitted step function with in/out shardings attached,
+  * ShapeDtypeStruct stand-ins (with shardings) for every input,
+so ``.lower(...).compile()`` runs without allocating a single parameter —
+the multi-pod dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config, input_specs
+from repro.models.transformer import (
+    ModelConfig,
+    apply_model,
+    init_cache,
+    init_params,
+)
+from repro.optim import adamw, linear_warmup_cosine
+from repro.parallel.activations import activation_sharding_ctx
+from repro.parallel.sharding import DEFAULT_RULES, logical_to_pspec
+from repro.runtime.serve import ServeConfig, make_decode_step, make_prefill_step
+from repro.runtime.train import TrainConfig, init_train_state, make_train_step
+
+__all__ = ["BuiltStep", "build_step", "param_shardings", "cache_pspec"]
+
+_BF16_OPT_THRESHOLD = 50e9  # params above this -> bf16 optimizer states
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    """A lowered-ready step: fn is jit-wrapped with shardings; args are
+    ShapeDtypeStructs (with shardings) matching fn's signature."""
+
+    fn: Any
+    args: tuple
+    cfg: ModelConfig
+    kind: str
+    meta: dict
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree,
+        shardings,
+    )
+
+
+def param_shardings(specs, shapes, mesh: Mesh):
+    def one(spec, sds):
+        return NamedSharding(
+            mesh, logical_to_pspec(spec, sds.shape, mesh, DEFAULT_RULES)
+        )
+
+    return jax.tree.map(
+        one,
+        specs,
+        shapes,
+        is_leaf=lambda x: x is None
+        or (
+            isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x)
+        ),
+    )
+
+
+def cache_pspec(path: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Sharding for a KV-cache leaf, by name + rank heuristics.
+
+    batch -> 'data', sequence -> 'model' (sequence-sharded caches are what
+    make 32k/500k decode fit HBM: DESIGN §4).  Non-divisible dims fall back
+    to replication via logical_to_pspec.
+    """
+    name = [getattr(p, "key", "") for p in path]
+    name = [n for n in name if isinstance(n, str)]
+    leaf = name[-1] if name else ""
+    rank = len(shape)
+    stacked = rank >= 1 and "body" in name  # leading n_periods dim
+
+    def spec_for(core: tuple) -> tuple:
+        return ((None,) + core) if stacked else core
+
+    if leaf in ("k", "v"):
+        core = ("data_only", "seq_shard", None, None)
+    elif leaf in ("c_kv", "k_rope"):
+        core = ("data_only", "seq_shard", None)
+    elif leaf == "conv":
+        core = ("data_only", None, "ff")
+    elif leaf == "state":
+        core = ("data_only", "heads", None, None)
+    elif leaf == "memory":
+        return logical_to_pspec(("data_only", None, None), shape, mesh)
+    else:
+        core = ("data_only",) + (None,) * (rank - (2 if stacked else 1))
+    spec = spec_for(core)
+    if len(spec) != rank:  # unexpected rank: replicate
+        return P()
+    return logical_to_pspec(spec, shape, mesh)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [
+        NamedSharding(mesh, cache_pspec(path, leaf.shape, mesh))
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _batch_pspec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+def _model_kwargs_fn(cfg: ModelConfig):
+    def fn(batch):
+        kw = {}
+        if "frames" in batch:
+            kw["frames"] = batch["frames"]
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        return kw
+
+    return fn
+
+
+def build_step(
+    arch: str,
+    shape: str | ShapeSpec,
+    mesh: Mesh,
+    cfg: ModelConfig | None = None,
+    tcfg: TrainConfig | None = None,
+    sparse: bool = False,
+) -> BuiltStep:
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    if cfg is None:
+        cfg = get_config(arch, spec) if not sparse else get_config(
+            arch, spec
+        )
+        if sparse:
+            import importlib
+
+            cfg = importlib.import_module(f"repro.configs.{arch}").config(
+                spec, sparse=True
+            )
+
+    key = jax.random.PRNGKey(0)
+    # Trace init_params for shapes only; capture specs/statics via closure —
+    # they are pure python/numpy (logical axes, layout tables, configs) and
+    # stay concrete during tracing.  No parameter is ever allocated.
+    aux: dict = {}
+
+    def _init_shapes(k):
+        p, s, st = init_params(cfg, k)
+        aux["specs"], aux["statics"] = s, st
+        return p
+
+    p_shapes = jax.eval_shape(_init_shapes, key)
+    specs, statics = aux["specs"], aux["statics"]
+    p_shard = param_shardings(specs, p_shapes, mesh)
+    batch_spec = _batch_pspec(mesh)
+    b_shard = NamedSharding(mesh, batch_spec)
+
+    ins = input_specs(arch, spec, cfg)
+    meta = {"arch": arch, "shape": spec.name, "cfg_name": cfg.name}
+
+    if spec.kind == "train":
+        n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p_shapes))
+        opt_dtype = jnp.bfloat16 if n_params > _BF16_OPT_THRESHOLD else jnp.float32
+        opt = adamw(mu_dtype=opt_dtype)
+        tcfg = tcfg or TrainConfig()
+        lr_fn = linear_warmup_cosine(3e-4, 100, 10000)
+        step = make_train_step(
+            cfg, statics, opt, lr_fn, tcfg, _model_kwargs_fn(cfg)
+        )
+
+        state_shapes = jax.eval_shape(
+            lambda p: init_train_state(p, opt, tcfg), p_shapes
+        )
+        state_shard = {
+            "params": p_shard,
+            "opt_state": {
+                "mu": _zero1(p_shard, p_shapes, mesh),
+                "nu": _zero1(p_shard, p_shapes, mesh),
+                "count": NamedSharding(mesh, P()),
+            },
+            "step": NamedSharding(mesh, P()),
+        }
+        batch_shapes = {"tokens": ins["tokens"], **{
+            k: v for k, v in ins.items() if k not in ("tokens", "pos")
+        }}
+        batch_shard = {k: b_shard for k in batch_shapes}
+
+        def wrapped(state, batch):
+            with activation_sharding_ctx(mesh):
+                return step(state, batch)
+
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(state_shard, batch_shard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+        args = (_sds(state_shapes, state_shard), _sds(batch_shapes, batch_shard))
+        meta["n_params"] = n_params
+        return BuiltStep(fn, args, cfg, "train", meta)
+
+    # serving paths
+    scfg = ServeConfig(max_seq=spec.seq_len, cache_dtype="bfloat16")
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(statics, spec.global_batch, spec.seq_len,
+                           jnp.bfloat16)
+    )
+    c_shard = cache_shardings(cache_shapes, mesh)
+
+    if spec.kind == "prefill":
+        prefill = make_prefill_step(cfg, statics, scfg)
+
+        def wrapped(params, cache, tokens, extras):
+            with activation_sharding_ctx(mesh):
+                return prefill(params, cache, tokens, extras)
+
+        tok_sds = ins["tokens"]
+        extras = {k: v for k, v in ins.items() if k not in ("tokens", "pos")}
+        ex_shard = {k: b_shard for k in extras}
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(p_shard, c_shard, b_shard, ex_shard),
+            out_shardings=(NamedSharding(mesh, _batch_pspec(mesh)), c_shard),
+            donate_argnums=(1,),
+        )
+        args = (
+            _sds(p_shapes, p_shard),
+            _sds(cache_shapes, c_shard),
+            jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype, sharding=b_shard),
+            _sds(extras, ex_shard),
+        )
+        return BuiltStep(fn, args, cfg, "prefill", meta)
+
+    # decode: one token against a full cache
+    decode = make_decode_step(cfg, statics, scfg)
+
+    def wrapped(params, cache, tokens, pos):
+        with activation_sharding_ctx(mesh):
+            return decode(params, cache, tokens, pos)
+
+    repl = NamedSharding(mesh, P())
+    tok_shard = b_shard if spec.global_batch % _dp_size(mesh) == 0 else repl
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_shard, c_shard, tok_shard, repl),
+        out_shardings=(tok_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    args = (
+        _sds(p_shapes, p_shard),
+        _sds(cache_shapes, c_shard),
+        jax.ShapeDtypeStruct(ins["tokens"].shape, jnp.int32, sharding=tok_shard),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
+    )
+    return BuiltStep(fn, args, cfg, "decode", meta)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(
+        np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names])
+    )
+
+
+def _zero1(p_shard, p_shapes, mesh: Mesh):
+    """ZeRO-1: shard optimizer moments over 'data' on the first dim that is
+    currently unsharded and divisible — on top of the param sharding."""
+    dsize = mesh.shape.get("data", 1)
+
+    def one(sh: NamedSharding, sds):
+        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+        for i, (ax, dim) in enumerate(zip(spec, sds.shape)):
+            if ax is None and dim % dsize == 0 and dsize > 1:
+                spec[i] = "data"
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return jax.tree.map(
+        one, p_shard, p_shapes,
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )

@@ -1,0 +1,372 @@
+"""Shared model building blocks: norms, embeddings, RoPE, MLPs, PatternLinear.
+
+Every ``*_init`` returns ``(params, specs)`` — two parallel pytrees, the
+second holding logical-axis tuples resolved by ``repro.parallel.sharding``.
+All ``*_apply`` are pure functions.  Compute dtype is the caller's; params
+are created in ``param_dtype``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import pattern_spmm_xla
+
+__all__ = [
+    "PatternSparseConfig",
+    "rmsnorm_init", "rmsnorm",
+    "layernorm_init", "layernorm",
+    "embed_init",
+    "linear_init", "linear",
+    "sparse_linear_init", "sparse_linear",
+    "mlp_init", "mlp_apply",
+    "rope_frequencies", "apply_rope",
+]
+
+
+# ---------------------------------------------------------------------------
+# pattern-sparse linear (TPU adaptation of the paper, DESIGN §3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSparseConfig:
+    """Config for block-pattern sparse linears (the paper's technique).
+
+    density:      fraction of 128-row blocks kept per output column.
+    num_patterns: dictionary size (pattern pruning).
+    kmax_slack:   static head-room over ceil(density * n_blocks) for tile
+                  unions after reordering (mixed tiles).
+    """
+
+    density: float = 0.25
+    num_patterns: int = 8
+    block: int = 128
+    tile: int = 128
+    kmax_slack: float = 1.5
+
+    def k_max(self, k_in: int) -> int:
+        nb = k_in // self.block
+        return max(1, min(nb, int(np.ceil(self.density * nb * self.kmax_slack))))
+
+    def applicable(self, k_in: int, n_out: int, model_shards: int) -> bool:
+        # the tile table pads itself to a multiple of model_shards, so only
+        # block/tile alignment of the true dims is required
+        return k_in % self.block == 0 and n_out % self.tile == 0
+
+
+def _fake_block_ids(
+    n_tiles: int, k_max: int, n_blocks: int, seed: int
+) -> np.ndarray:
+    """Statistically-plausible block index table for init/dry-run.
+
+    Sorted unique ids per tile (what a real layout produces); padding slots
+    repeat the last id (their weight bricks are zero).
+    """
+    rng = np.random.default_rng(seed)
+    ids = np.zeros((n_tiles, k_max), np.int32)
+    for t in range(n_tiles):
+        pick = np.sort(rng.choice(n_blocks, size=min(k_max, n_blocks), replace=False))
+        ids[t, : pick.size] = pick
+        ids[t, pick.size :] = pick[-1] if pick.size else 0
+    return ids
+
+
+def _fake_pattern_groups(
+    n_tiles: int, k_max: int, n_blocks: int, num_patterns: int, seed: int,
+    model_shards: int = 1,
+) -> list[dict]:
+    """Dictionary-level layout: tiles grouped by shared pattern.
+
+    This is the paper's kernel-reordering invariant at tile granularity —
+    after reordering, tiles with the same pattern are contiguous, so the
+    XLA path can run ONE gather + ONE dense matmul per dictionary pattern
+    (pattern blocks), instead of per-brick gathers.  Group boundaries are
+    rounded to shard-chunk multiples so slices of the tiles-sharded weight
+    stay local.  Returns [{'tiles': (start, stop), 'blocks': ids}].
+    """
+    rng = np.random.default_rng(seed)
+    chunk = max(1, n_tiles // max(model_shards, 1))
+    n_groups = min(num_patterns, max(1, n_tiles // chunk))
+    bounds = np.linspace(0, n_tiles, n_groups + 1)
+    bounds = np.round(bounds / chunk).astype(int) * chunk
+    bounds[0], bounds[-1] = 0, n_tiles
+    groups = []
+    for g in range(n_groups):
+        if bounds[g + 1] <= bounds[g]:
+            continue
+        pick = np.sort(rng.choice(n_blocks, size=min(k_max, n_blocks),
+                                  replace=False))
+        groups.append({
+            "tiles": (int(bounds[g]), int(bounds[g + 1])),
+            "blocks": pick.astype(np.int32),
+        })
+    return groups
+
+
+def sparse_linear_init(
+    key: jax.Array,
+    k_in: int,
+    n_out: int,
+    cfg: PatternSparseConfig,
+    out_axis: str = "tiles",
+    param_dtype=jnp.float32,
+    seed: int = 0,
+    model_shards: int = 16,
+):
+    """Block-pattern compressed linear.  The layout (block_ids, inv_order)
+    is a static constant (the paper's weight-index buffer); w_comp is the
+    trainable compressed weight.
+
+    The tile table is padded to a multiple of ``model_shards`` so the tiles
+    dim shards evenly on any d_ff (qwen's 27648 -> 224 tiles); padded tiles
+    hold zero bricks and their output columns are sliced off.
+    """
+    nb = k_in // cfg.block
+    n_tiles = n_out // cfg.tile
+    n_tiles_pad = ((n_tiles + model_shards - 1) // model_shards) * model_shards
+    k_max = cfg.k_max(k_in)
+    scale = 1.0 / np.sqrt(k_in * cfg.density)
+    w = jax.random.normal(
+        key, (n_tiles_pad, k_max, cfg.block, cfg.tile), param_dtype
+    ) * scale
+    if n_tiles_pad != n_tiles:
+        w = w.at[n_tiles:].set(0.0)
+    params = {"w_comp": w}
+    specs = {"w_comp": ("tiles", None, None, None)}
+    static = {
+        "block_ids": _fake_block_ids(n_tiles_pad, k_max, nb, seed),
+        "groups": _fake_pattern_groups(
+            n_tiles_pad, k_max, nb, cfg.num_patterns, seed,
+            model_shards=model_shards,
+        ),
+        "inv_order": np.arange(n_out, dtype=np.int32),
+        "block": cfg.block,
+        "tile": cfg.tile,
+        "n_out": n_out,
+    }
+    return params, specs, static
+
+
+def sparse_linear(params, static, x: jax.Array) -> jax.Array:
+    """y = x @ W_compressed (XLA path; the Pallas kernel is dispatched by
+    kernels/ops.py on real TPU backends).
+
+    When the layout carries dictionary groups (tiles sharing a pattern are
+    contiguous — the paper's kernel reordering), compute runs as one gather
+    + one dense matmul per *pattern* (pattern blocks), which is both the
+    paper's compute structure and the XLA-efficient form: x is gathered P
+    times total instead of per brick slot.  Falls back to the generic
+    per-slot scan for arbitrary block_ids tables.
+    """
+    groups = static.get("groups")
+    w_comp = params["w_comp"].astype(x.dtype)
+    block, tile = static["block"], static.get("tile", w_comp.shape[-1])
+    if groups:
+        lead = x.shape[:-1]
+        xm = x.reshape(-1, x.shape[-1])
+        m = xm.shape[0]
+        xb = xm.reshape(m, -1, block)
+        outs = []
+        for g in groups:
+            t0, t1 = g["tiles"]
+            blocks = g["blocks"]  # [s_p] static
+            s_p = len(blocks)
+            # pattern block: gather once, one dense matmul (paper Fig 4)
+            xg = jnp.take(xb, jnp.asarray(blocks), axis=1)  # [M, s_p, blk]
+            xg = xg.reshape(m, s_p * block)
+            # bricks of this group in tile order -> [s_p*block, cols]
+            wg = w_comp[t0:t1, :s_p]  # [T_g, s_p, block, tile]
+            wg = wg.transpose(1, 2, 0, 3).reshape(
+                s_p * block, (t1 - t0) * tile
+            )
+            outs.append(
+                jnp.dot(xg, wg, preferred_element_type=jnp.float32)
+            )
+        y = jnp.concatenate(outs, axis=-1).astype(x.dtype)
+        y = y.reshape(*lead, y.shape[-1])
+    else:
+        y = pattern_spmm_xla(
+            x,
+            w_comp,
+            jnp.asarray(static["block_ids"]),
+            block,
+        )
+    n_out = static["n_out"]
+    if y.shape[-1] != n_out:  # drop tile-padding columns
+        y = y[..., :n_out]
+    inv = static["inv_order"]
+    if not np.array_equal(inv, np.arange(n_out)):
+        y = jnp.take(y, jnp.asarray(inv), axis=-1)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# dense primitives
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), param_dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, param_dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), param_dtype), "bias": jnp.zeros((d,), param_dtype)}
+    return p, {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, param_dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), param_dtype) * (d ** -0.5)
+    return {"w": w}, {"w": ("vocab", "embed")}
+
+
+def linear_init(
+    key,
+    d_in: int,
+    d_out: int,
+    in_axis: str | None = "embed",
+    out_axis: str | None = "ff",
+    bias: bool = False,
+    param_dtype=jnp.float32,
+    scale: float | None = None,
+):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), param_dtype) * scale}
+    s = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), param_dtype)
+        s["b"] = (out_axis,)
+    return p, s
+
+
+def linear(params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU), optionally pattern-sparse
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    act: str = "swiglu",
+    sparse: PatternSparseConfig | None = None,
+    model_shards: int = 16,
+    param_dtype=jnp.float32,
+):
+    """Returns (params, specs, static).  static carries sparse layouts."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params, specs, static = {}, {}, {"act": act, "sparse": None}
+    use_sparse = sparse is not None and sparse.applicable(
+        d_model, d_ff, model_shards
+    ) and sparse.applicable(d_ff, d_model, model_shards)
+    if use_sparse:
+        static["sparse"] = sparse
+        if act == "swiglu":
+            params["gate"], specs["gate"], static["gate"] = sparse_linear_init(
+                k1, d_model, d_ff, sparse, param_dtype=param_dtype, seed=1,
+                model_shards=model_shards,
+            )
+        params["up"], specs["up"], static["up"] = sparse_linear_init(
+            k2, d_model, d_ff, sparse, param_dtype=param_dtype, seed=2,
+            model_shards=model_shards,
+        )
+        params["down"], specs["down"], static["down"] = sparse_linear_init(
+            k3, d_ff, d_model, sparse, param_dtype=param_dtype, seed=3,
+            model_shards=model_shards,
+        )
+        # down output tiles stay in compressed order; its inv_order is
+        # identity here because _fake layouts don't permute — real layouts
+        # from build_block_pattern carry the true inverse permutation.
+    else:
+        if act == "swiglu":
+            params["gate"], specs["gate"] = linear_init(
+                k1, d_model, d_ff, "embed", "ff", param_dtype=param_dtype
+            )
+        params["up"], specs["up"] = linear_init(
+            k2, d_model, d_ff, "embed", "ff", param_dtype=param_dtype
+        )
+        params["down"], specs["down"] = linear_init(
+            k3, d_ff, d_model, "ff", "embed", param_dtype=param_dtype
+        )
+    return params, specs, static
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(name)
+
+
+def mlp_apply(params, static, x: jax.Array) -> jax.Array:
+    sparse = static.get("sparse")
+    if sparse is not None:
+        up = sparse_linear(params["up"], static["up"], x)
+        if static["act"] == "swiglu":
+            gate = sparse_linear(params["gate"], static["gate"], x)
+            h = jax.nn.silu(gate) * up
+        else:
+            h = _act(static["act"], up)
+        return sparse_linear(params["down"], static["down"], h)
+    up = linear(params["up"], x)
+    if static["act"] == "swiglu":
+        h = jax.nn.silu(linear(params["gate"], x)) * up
+    else:
+        h = _act(static["act"], up)
+    return linear(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # [..., S, H, D] or [..., S, D]
+    positions: jax.Array,  # [..., S]
+    freqs: jax.Array,  # [D/2]
+) -> jax.Array:
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    if x.ndim == angles.ndim + 1:  # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

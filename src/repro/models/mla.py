@@ -1,0 +1,195 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+KV state is compressed to a ``kv_lora``-dim latent (plus a shared RoPE key
+of ``d_rope`` dims): the cache per token is kv_lora + d_rope floats
+(576 for DeepSeek), independent of head count.
+
+Two compute paths:
+  * prefill — decompress K/V per head and run standard (chunked) attention;
+  * decode  — *absorbed* form: W_uk is folded into the query and W_uv into
+    the output projection, so attention runs entirely in the latent space
+    (per-token cost O(h * kv_lora), no per-head KV materialisation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _chunked_attention, _full_attention
+from repro.models.layers import (
+    apply_rope,
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope_frequencies,
+)
+
+__all__ = ["MLAConfig", "mla_init", "mla_apply", "init_mla_cache"]
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    q_lora: int = 1536
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 10000.0
+    model_shards: int = 16
+    chunk: int = 1024
+    full_attn_max_seq: int = 8192
+
+
+def mla_init(key, cfg: MLAConfig, param_dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    params, specs = {}, {}
+    params["wq_a"], specs["wq_a"] = linear_init(
+        keys[0], d, cfg.q_lora, "embed", "q_lora", param_dtype=param_dtype
+    )
+    params["q_norm"], specs["q_norm"] = rmsnorm_init(cfg.q_lora, param_dtype)
+    params["wq_b"], specs["wq_b"] = linear_init(
+        keys[1], cfg.q_lora, h * (cfg.d_nope + cfg.d_rope), "q_lora", "heads",
+        param_dtype=param_dtype,
+    )
+    params["wkv_a"], specs["wkv_a"] = linear_init(
+        keys[2], d, cfg.kv_lora + cfg.d_rope, "embed", "kv_lora",
+        param_dtype=param_dtype,
+    )
+    params["kv_norm"], specs["kv_norm"] = rmsnorm_init(cfg.kv_lora, param_dtype)
+    params["wkv_b"], specs["wkv_b"] = linear_init(
+        keys[3], cfg.kv_lora, h * (cfg.d_nope + cfg.d_v), "kv_lora", "heads",
+        param_dtype=param_dtype,
+    )
+    params["wo"], specs["wo"] = linear_init(
+        keys[4], h * cfg.d_v, d, "heads", "embed", param_dtype=param_dtype
+    )
+    return params, specs
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.d_rope), dtype),
+    }
+
+
+def _project_q(params, cfg: MLAConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = linear(params["wq_b"], rmsnorm(params["q_norm"], linear(params["wq_a"], x)))
+    q = q.reshape(b, s, h, cfg.d_nope + cfg.d_rope)
+    q_nope, q_rope = q[..., : cfg.d_nope], q[..., cfg.d_nope :]
+    freqs = rope_frequencies(cfg.d_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, positions[None, :], freqs)
+    return q_nope, q_rope
+
+
+def _compress_kv(params, cfg: MLAConfig, x, positions):
+    kv = linear(params["wkv_a"], x)  # [B,S,kv_lora + d_rope]
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora])
+    k_rope = kv[..., cfg.kv_lora :]
+    freqs = rope_frequencies(cfg.d_rope, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions[None, :], freqs)
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params,
+    cfg: MLAConfig,
+    x: jax.Array,  # [B,S,D]
+    positions: jax.Array,  # [S]
+    cache: dict | None = None,
+    cache_pos: jax.Array | None = None,
+    cache_len: jax.Array | None = None,
+    absorbed: bool | None = None,
+) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    c_kv_new, k_rope_new = _compress_kv(params, cfg, x, positions)
+
+    new_cache = cache
+    if cache is not None:
+        pos0 = cache_pos if cache_pos is not None else jnp.int32(0)
+        new_cache = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype),
+                (0, pos0, 0),
+            ),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+                (0, pos0, 0),
+            ),
+        }
+        c_kv, k_rope = new_cache["c_kv"], new_cache["k_rope"]
+        t = c_kv.shape[1]
+        kpos = jnp.arange(t)
+    else:
+        c_kv, k_rope = c_kv_new, k_rope_new
+        t = s
+        kpos = positions
+
+    if absorbed is None:
+        absorbed = s == 1  # decode default
+
+    wkv_b = params["wkv_b"]["w"].reshape(cfg.kv_lora, h, cfg.d_nope + cfg.d_v)
+    w_uk = wkv_b[..., : cfg.d_nope]  # [kv_lora, h, d_nope]
+    w_uv = wkv_b[..., cfg.d_nope :]  # [kv_lora, h, d_v]
+
+    if absorbed:
+        # fold W_uk into q: q_abs [B,S,h,kv_lora]
+        q_abs = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        s_lat = jnp.einsum("bshl,btl->bhst", q_abs,
+                           c_kv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                            k_rope.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        qq = positions[:, None]
+        kk = kpos[None, :]
+        mask = qq >= kk
+        if cache_len is not None:
+            mask &= kk < cache_len
+        scores = jnp.where(mask[None, None], scores, _NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btl->bshl", p, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bshl,lhv->bshv", o_lat, w_uv.astype(jnp.float32))
+    else:
+        # decompress per head and use the standard attention paths
+        kv_len = cache_len
+        k_nope = jnp.einsum("btl,lhd->bthd", c_kv.astype(jnp.float32),
+                            w_uk.astype(jnp.float32))
+        v = jnp.einsum("btl,lhv->bthv", c_kv.astype(jnp.float32),
+                       w_uv.astype(jnp.float32))
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, :, None, :].astype(jnp.float32),
+            (b, t, h, cfg.d_rope),
+        )
+        k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q_full = jnp.concatenate(
+            [q_nope.astype(jnp.float32), q_rope.astype(jnp.float32)], -1
+        )
+        qh = q_full.transpose(0, 2, 1, 3)
+        kh = k_full.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        if max(s, t) <= cfg.full_attn_max_seq:
+            out = _full_attention(qh, kh, vh, positions, kpos, True, None,
+                                  kv_len)
+        else:
+            out = _chunked_attention(qh, kh, vh, positions, kpos, True, None,
+                                     kv_len, cfg.chunk)
+        out = out.transpose(0, 2, 1, 3)  # [B,S,h,d_v]
+
+    out = out.reshape(b, s, h * cfg.d_v).astype(x.dtype)
+    return linear(params["wo"], out), new_cache

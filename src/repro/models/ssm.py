@@ -1,0 +1,249 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked matmul-form SSD (Dao & Gu 2024): the sequence is split into chunks;
+within a chunk the output is a masked quadratic form (MXU-friendly), across
+chunks a compact state [H, P, N] is carried by a linear recurrence
+(lax.scan).  Decode is the single-step recurrence on the cached state.
+
+Technique note (DESIGN §4): the paper's pattern sparsity applies to
+in_proj / out_proj (plain matmuls); the SSD recurrence itself has no weight
+matrix to prune — inapplicability documented, arch still fully supported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "init_ssm_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    model_shards: int = 16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, cfg: SSMConfig, param_dtype=jnp.float32):
+    keys = jax.random.split(key, 4)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    params, specs = {}, {}
+    # in_proj -> [z, xBC, dt]
+    d_in_proj = 2 * di + 2 * cfg.n_groups * cfg.d_state + h
+    params["in_proj"], specs["in_proj"] = linear_init(
+        keys[0], d, d_in_proj, "embed", "ff", param_dtype=param_dtype
+    )
+    params["conv_w"] = (
+        jax.random.normal(keys[1], (cfg.d_conv, cfg.conv_dim), param_dtype)
+        * (cfg.d_conv ** -0.5)
+    )
+    specs["conv_w"] = ("conv", "ff")
+    params["conv_b"] = jnp.zeros((cfg.conv_dim,), param_dtype)
+    specs["conv_b"] = ("ff",)
+    params["A_log"] = jnp.log(
+        jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+    ).astype(param_dtype)
+    specs["A_log"] = ("heads",)
+    params["D"] = jnp.ones((h,), param_dtype)
+    specs["D"] = ("heads",)
+    params["dt_bias"] = jnp.zeros((h,), param_dtype)
+    specs["dt_bias"] = ("heads",)
+    params["norm"], specs["norm"] = rmsnorm_init(di, param_dtype)
+    params["out_proj"], specs["out_proj"] = linear_init(
+        keys[2], di, d, "ff", "embed", param_dtype=param_dtype
+    )
+    return params, specs
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype
+        ),
+    }
+
+
+def _split_in_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim :]  # [.., h]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: SSMConfig, xbc: jax.Array, w, b, conv_state=None):
+    """Depthwise causal conv1d.  xbc: [B,S,C]."""
+    k = cfg.d_conv
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        xin = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    s_out = xbc.shape[1]
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xin[:, i : i + s_out].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    out = out + b.astype(jnp.float32)
+    new_state = xin[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(cfg, xh, dt, a, B, C, init_state):
+    """Chunked SSD scan.
+
+    xh: [Bt, S, H, P]; dt: [Bt, S, H]; a = -exp(A_log): [H];
+    B, C: [Bt, S, G, N]; init_state: [Bt, H, P, N].
+    Returns (y [Bt,S,H,P], final_state).
+    """
+    bsz, s, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    q = cfg.chunk
+    nc = s // q
+    assert s % q == 0, "sequence must be a multiple of the SSD chunk"
+
+    # per-head log-decay per step: [Bt, S, H]
+    da = dt * a[None, None, :]
+    dax = xh * dt[..., None]  # dt-weighted input
+
+    # reshape into chunks
+    da_c = da.reshape(bsz, nc, q, h)
+    x_c = dax.reshape(bsz, nc, q, h, p)
+    B_c = B.reshape(bsz, nc, q, g, n)
+    C_c = C.reshape(bsz, nc, q, g, n)
+
+    # cumulative decay within chunk
+    cum = jnp.cumsum(da_c, axis=2)  # [Bt,nc,q,h]
+    total = cum[:, :, -1]  # [Bt,nc,h]
+
+    # intra-chunk (masked quadratic) term
+    # L[i,j] = exp(cum[i] - cum[j]) for i >= j.  Mask the exponent BEFORE
+    # exp: the upper triangle has positive exponents that overflow to inf,
+    # and where(mask, inf, 0) back-propagates 0 * inf = NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [Bt,nc,qi,qj,h]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    L = jnp.exp(diff)
+    # scores between positions via B,C (broadcast groups over heads)
+    rep = h // g
+    B_h = jnp.repeat(B_c, rep, axis=3)  # [Bt,nc,q,h,n]
+    C_h = jnp.repeat(C_c, rep, axis=3)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", C_h, B_h)  # [Bt,nc,qi,qj,h]
+    y_intra = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", cb, L, x_c)
+
+    # chunk-final states: S_c = sum_j exp(total - cum[j]) * B_j x_j^T
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [Bt,nc,q,h]
+    states = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchpn", decay_to_end, B_h, x_c
+    )  # [Bt,nc,h,p,n]
+
+    # inter-chunk recurrence over chunk index
+    def scan_fn(carry, xs):
+        st = carry  # [Bt,h,p,n]
+        state_c, tot_c = xs  # [Bt,h,p,n], [Bt,h]
+        out_prev = st
+        st = st * jnp.exp(tot_c)[:, :, None, None] + state_c
+        return st, out_prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        scan_fn,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [Bt,nc,h,p,n]
+
+    # inter-chunk contribution: y_j += C_j exp(cum_j) state_prev
+    decay_in = jnp.exp(cum)  # [Bt,nc,q,h]
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", C_h, prev_states, decay_in
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssm_apply(
+    params,
+    cfg: SSMConfig,
+    x: jax.Array,  # [B,S,D]
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxbcdt = linear(params["in_proj"], x)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # [B,S,H]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        cfg, xbc, params["conv_w"], params["conv_b"], conv_state
+    )
+    xh = xbc[..., : cfg.d_inner].reshape(b, s, h, p).astype(jnp.float32)
+    Bmat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, s, g, n)
+    Cmat = xbc[..., cfg.d_inner + g * n :].reshape(b, s, g, n)
+    Bmat = Bmat.astype(jnp.float32)
+    Cmat = Cmat.astype(jnp.float32)
+
+    init_state = (
+        cache["state"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    if s == 1:  # decode: single recurrence step
+        rep = h // g
+        B_h = jnp.repeat(Bmat[:, 0], rep, axis=1)  # [B,h,n]
+        C_h = jnp.repeat(Cmat[:, 0], rep, axis=1)
+        da = jnp.exp(dt[:, 0] * a[None, :])  # [B,h]
+        dx = xh[:, 0] * dt[:, 0][..., None]  # [B,h,p]
+        state = init_state * da[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", dx, B_h
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_h)[:, None]  # [B,1,h,p]
+        final_state = state
+    else:
+        pad = (-s) % cfg.chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final_state = _ssd_chunked(cfg, xh, dt, a, Bmat, Cmat, init_state)
+        y = y[:, :s]
+
+    y = y + xh[:, :s] * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = linear(params["out_proj"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": final_state.astype(cache["state"].dtype)}
+    return out, new_cache

@@ -1,0 +1,597 @@
+"""Config-driven transformer assembly covering all assigned architectures.
+
+A model is a sequence of layers; each layer is a (mixer, ffn) pair:
+
+  mixer: 'attn' | 'swa' | 'mla' | 'ssm' | 'xattn' (decoder self+cross)
+  ffn:   'mlp' | 'moe' | 'none'
+
+``layer_types`` lists every layer.  The stack is factored into an optional
+non-periodic *prefix* (DeepSeek's leading dense layers) plus a repeating
+*period* (jamba's 8-layer attn/mamba/MoE unit, period 1 for homogeneous
+models); period params are stacked [n_periods, ...] and executed with
+``lax.scan`` (+ optional remat), so compile time and HLO size are
+O(period), not O(n_layers).
+
+Enc-dec (whisper) adds an encoder stack and cross-attention in the decoder;
+VLM (paligemma) accepts precomputed prefix embeddings (frontends are stubs
+per the assignment).  MTP (DeepSeek-V3) adds the extra next-next-token
+layer + shared head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (
+    AttnConfig,
+    attention_apply,
+    attention_init,
+    init_kv_cache,
+)
+from repro.models.layers import (
+    PatternSparseConfig,
+    embed_init,
+    layernorm,
+    layernorm_init,
+    linear,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.models.mla import MLAConfig, init_mla_cache, mla_apply, mla_init
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.ssm import SSMConfig, init_ssm_cache, ssm_apply, ssm_init
+from repro.parallel.activations import shard_activation
+from repro.parallel.sharding import pad_to_multiple
+
+__all__ = ["ModelConfig", "init_params", "apply_model", "init_cache",
+           "model_flops_per_token", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    layer_types: tuple[tuple[str, str], ...]  # (mixer, ffn) per layer
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 128
+    qkv_bias: bool = False
+    window: int | None = None
+    rope_theta: float | None = 10000.0
+    # ffn
+    d_ff: int = 0
+    act: str = "swiglu"
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = False
+    mtp: bool = False
+    # enc-dec (whisper): encoder layer count; encoder input is stub frame
+    # embeddings [B, enc_seq, d_model]
+    encoder_layers: int = 0
+    enc_seq: int = 0
+    # vlm (paligemma): prefix patch embeddings [B, n_patches, d_model]
+    prefix_len: int = 0
+    # sparsity (the paper's technique, block-granular)
+    sparse: PatternSparseConfig | None = None
+    # numerics / distribution
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    model_shards: int = 16
+    remat: bool = True
+    vocab_pad: int = 256
+    max_seq: int = 4096  # cache capacity for serving
+    decode_strategy: str = "gather"  # 'gather' | 'flash' (see AttnConfig)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab, self.vocab_pad)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def attn_cfg(self, window: bool) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.d_head,
+            qkv_bias=self.qkv_bias,
+            window=self.window if window else None,
+            rope_theta=self.rope_theta,
+            model_shards=self.model_shards,
+            decode_strategy=self.decode_strategy,
+        )
+
+
+def find_structure(
+    layer_types: Sequence[tuple[str, str]]
+) -> tuple[int, int]:
+    """Returns (prefix_len, period) minimizing the period over small
+    prefixes — the scan body is O(period), so a 1-layer prefix + period-1
+    body (DeepSeek) must win over prefix-0 + period-n (fully unrolled)."""
+    n = len(layer_types)
+    best = (0, n if n else 1)
+    for prefix in range(0, min(n, 5)):
+        body = layer_types[prefix:]
+        m = len(body)
+        if m == 0:
+            if 1 < best[1]:
+                best = (prefix, 1)
+            continue
+        for period in range(1, m + 1):
+            if m % period:
+                continue
+            if all(body[i] == body[i % period] for i in range(m)):
+                if period < best[1]:
+                    best = (prefix, period)
+                break
+    return best
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, ltype: tuple[str, str], decoder: bool):
+    mixer, ffn = ltype
+    pdt = cfg.pdtype()
+    norm_init = rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init
+    keys = jax.random.split(key, 6)
+    params: dict = {}
+    specs: dict = {}
+    static: dict = {"mixer": mixer, "ffn": ffn}
+
+    params["norm1"], specs["norm1"] = norm_init(cfg.d_model, pdt)
+    if mixer in ("attn", "swa"):
+        acfg = cfg.attn_cfg(window=mixer == "swa")
+        params["attn"], specs["attn"] = attention_init(keys[0], acfg, pdt)
+        static["attn_cfg"] = acfg
+    elif mixer == "xattn":
+        acfg = cfg.attn_cfg(window=False)
+        params["attn"], specs["attn"] = attention_init(keys[0], acfg, pdt)
+        static["attn_cfg"] = acfg
+        xcfg = dataclasses.replace(acfg, causal=False, rope_theta=None)
+        params["xnorm"], specs["xnorm"] = norm_init(cfg.d_model, pdt)
+        params["xattn"], specs["xattn"] = attention_init(keys[1], xcfg, pdt)
+        static["xattn_cfg"] = xcfg
+    elif mixer == "mla":
+        assert cfg.mla is not None
+        params["attn"], specs["attn"] = mla_init(keys[0], cfg.mla, pdt)
+        static["mla_cfg"] = cfg.mla
+    elif mixer == "ssm":
+        assert cfg.ssm is not None
+        params["attn"], specs["attn"] = ssm_init(keys[0], cfg.ssm, pdt)
+        static["ssm_cfg"] = cfg.ssm
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    if ffn != "none":
+        params["norm2"], specs["norm2"] = norm_init(cfg.d_model, pdt)
+    if ffn == "mlp":
+        params["mlp"], specs["mlp"], static["mlp"] = mlp_init(
+            keys[2], cfg.d_model, cfg.d_ff, act=cfg.act, sparse=cfg.sparse,
+            model_shards=cfg.model_shards, param_dtype=pdt,
+        )
+    elif ffn == "moe":
+        assert cfg.moe is not None
+        params["moe"], specs["moe"], static["moe"] = moe_init(
+            keys[3], cfg.moe, pdt
+        )
+    elif ffn != "none":
+        raise ValueError(f"unknown ffn {ffn!r}")
+    return params, specs, static
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    """Returns (params, specs, statics) for the full model."""
+    pdt = cfg.pdtype()
+    norm_init = rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init
+    keys = jax.random.split(key, 16)
+    params: dict = {}
+    specs: dict = {}
+    statics: dict = {"cfg": cfg}
+
+    params["embed"], specs["embed"] = embed_init(
+        keys[0], cfg.padded_vocab, cfg.d_model, pdt
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = linear_init(
+            keys[1], cfg.d_model, cfg.padded_vocab, "embed", "vocab",
+            param_dtype=pdt,
+        )
+    params["final_norm"], specs["final_norm"] = norm_init(cfg.d_model, pdt)
+
+    if cfg.rope_theta is None:  # whisper-style learned decoder positions
+        params["dec_pos"] = (
+            jax.random.normal(keys[11], (cfg.max_seq, cfg.d_model), pdt) * 0.02
+        )
+        specs["dec_pos"] = ("seq", "embed")
+
+    prefix, period = find_structure(cfg.layer_types)
+    statics["prefix"] = prefix
+    statics["period"] = period
+    n_periods = (cfg.n_layers - prefix) // period
+    statics["n_periods"] = n_periods
+
+    params["prefix_layers"] = []
+    specs["prefix_layers"] = []
+    statics["prefix_layers"] = []
+    for i in range(prefix):
+        p, s, st = _layer_init(keys[2 + i % 8], cfg, cfg.layer_types[i], True)
+        params["prefix_layers"].append(p)
+        specs["prefix_layers"].append(s)
+        statics["prefix_layers"].append(st)
+
+    # period positions: stack params across periods
+    params["body"] = []
+    specs["body"] = []
+    statics["body"] = []
+    for j in range(period):
+        stacked_p = []
+        sspec = None
+        sstatic = None
+        for rep in range(n_periods):
+            lk = jax.random.fold_in(keys[10], j * 1000 + rep)
+            p, s, st = _layer_init(
+                lk, cfg, cfg.layer_types[prefix + rep * period + j], True
+            )
+            stacked_p.append(p)
+            sspec, sstatic = s, st
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked_p)
+        sspec = jax.tree.map(
+            lambda sp: (None,) + tuple(sp),
+            sspec,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+        params["body"].append(stacked)
+        specs["body"].append(sspec)
+        statics["body"].append(sstatic)
+
+    # encoder (whisper): homogeneous stack -> stacked params + lax.scan
+    if cfg.encoder_layers:
+        params["enc_pos"] = (
+            jax.random.normal(keys[12], (cfg.enc_seq, cfg.d_model), pdt) * 0.02
+        )
+        specs["enc_pos"] = ("seq", "embed")
+        enc_ps = []
+        enc_spec = enc_st = None
+        for i in range(cfg.encoder_layers):
+            lk = jax.random.fold_in(keys[13], i)
+            p, s, st = _layer_init(lk, cfg, ("attn", "mlp"), False)
+            enc_ps.append(p)
+            enc_spec, enc_st = s, st
+        # encoder attention is bidirectional, no rope (learned positions)
+        enc_st = dict(enc_st)
+        enc_st["attn_cfg"] = dataclasses.replace(
+            enc_st["attn_cfg"], causal=False, rope_theta=None
+        )
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_ps)
+        specs["encoder"] = jax.tree.map(
+            lambda sp: (None,) + tuple(sp),
+            enc_spec,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+        statics["encoder"] = enc_st
+        params["enc_norm"], specs["enc_norm"] = norm_init(cfg.d_model, pdt)
+
+    if cfg.mtp:
+        p, s, st = _layer_init(keys[14], cfg, cfg.layer_types[-1], True)
+        params["mtp_layer"], specs["mtp_layer"] = p, s
+        statics["mtp_layer"] = st
+        params["mtp_proj"], specs["mtp_proj"] = linear_init(
+            keys[15], 2 * cfg.d_model, cfg.d_model, "embed", "embed",
+            param_dtype=pdt,
+        )
+        params["mtp_norm"], specs["mtp_norm"] = norm_init(cfg.d_model, pdt)
+
+    return params, specs, statics
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, static, batch: int, max_seq: int, dtype):
+    mixer = static["mixer"]
+    if mixer in ("attn", "swa"):
+        return init_kv_cache(static["attn_cfg"], batch, max_seq, dtype)
+    if mixer == "xattn":
+        return {
+            "self": init_kv_cache(static["attn_cfg"], batch, max_seq, dtype),
+        }
+    if mixer == "mla":
+        return init_mla_cache(static["mla_cfg"], batch, max_seq, dtype)
+    if mixer == "ssm":
+        return init_ssm_cache(static["ssm_cfg"], batch)
+    raise ValueError(mixer)
+
+
+def init_cache(
+    statics, batch: int, max_seq: int | None = None, dtype=jnp.bfloat16
+):
+    cfg: ModelConfig = statics["cfg"]
+    max_seq = max_seq or cfg.max_seq
+    cache: dict = {"prefix_layers": [], "body": []}
+    for st in statics["prefix_layers"]:
+        cache["prefix_layers"].append(_layer_cache(cfg, st, batch, max_seq, dtype))
+    for st in statics["body"]:
+        one = _layer_cache(cfg, st, batch, max_seq, dtype)
+        cache["body"].append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (statics["n_periods"],) + x.shape
+                ),
+                one,
+            )
+        )
+    if cfg.encoder_layers:
+        cache["memory"] = jnp.zeros(
+            (batch, cfg.enc_seq, cfg.d_model), dtype
+        )
+    return cache
+
+
+def cache_specs(statics):
+    """Logical axis specs for the cache pytree (batch/seq sharding)."""
+    def leaf_spec(path_leaf):
+        x = path_leaf
+        if x.ndim == 4 and x.shape[1] > 1:  # [B,S,H,D] kv cache
+            return ("data_only", "seq_shard", None, None)
+        if x.ndim == 5:  # stacked [L,B,S,H,D]
+            return (None, "data_only", "seq_shard", None, None)
+        if x.ndim == 3:  # [B,S,D] (mla latent / memory)
+            return ("data_only", "seq_shard", None)
+        if x.ndim == 2:
+            return ("data_only", None)
+        return tuple(["data_only"] + [None] * (x.ndim - 1))
+    return None  # resolved dynamically in launch (shape-dependent)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    params, static, cfg: ModelConfig, x, positions, cache, cache_pos,
+    cache_len, memory,
+):
+    norm = rmsnorm if cfg.norm == "rmsnorm" else layernorm
+    mixer = static["mixer"]
+    h = norm(params["norm1"], x)
+    new_cache = cache
+    if mixer in ("attn", "swa"):
+        out, new_cache = attention_apply(
+            params["attn"], static["attn_cfg"], h, positions,
+            cache=cache, cache_pos=cache_pos, cache_len=cache_len,
+        )
+    elif mixer == "xattn":
+        out, self_cache = attention_apply(
+            params["attn"], static["attn_cfg"], h, positions,
+            cache=cache["self"] if cache else None,
+            cache_pos=cache_pos, cache_len=cache_len,
+        )
+        x = x + out
+        h = norm(params["xnorm"], x)
+        out, _ = attention_apply(
+            params["xattn"], static["xattn_cfg"], h, positions,
+            memory=memory,
+        )
+        new_cache = {"self": self_cache} if cache else None
+    elif mixer == "mla":
+        out, new_cache = mla_apply(
+            params["attn"], static["mla_cfg"], h, positions,
+            cache=cache, cache_pos=cache_pos, cache_len=cache_len,
+        )
+    elif mixer == "ssm":
+        out, new_cache = ssm_apply(params["attn"], static["ssm_cfg"], h, cache)
+    x = x + out
+
+    ffn = static["ffn"]
+    if ffn != "none":
+        h = norm(params["norm2"], x)
+        if ffn == "mlp":
+            x = x + mlp_apply(params["mlp"], static["mlp"], h)
+        else:
+            x = x + moe_apply(params["moe"], static["moe"], cfg.moe, h)
+    x = shard_activation(x, ("batch", "seq_shard", None))
+    return x, new_cache
+
+
+def _encode(params, statics, cfg: ModelConfig, frames: jax.Array):
+    """Whisper encoder over stub frame embeddings [B, enc_seq, d]."""
+    norm = rmsnorm if cfg.norm == "rmsnorm" else layernorm
+    x = frames.astype(cfg.cdtype()) + params["enc_pos"].astype(cfg.cdtype())
+    pos = jnp.arange(frames.shape[1])
+    st = statics["encoder"]
+
+    def enc_fn(carry, p):
+        y, _ = _apply_layer(p, st, cfg, carry, pos, None, None, None, None)
+        return y, None
+
+    fn = enc_fn
+    if cfg.remat:
+        fn = jax.checkpoint(
+            enc_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return norm(params["enc_norm"], x)
+
+
+def apply_model(
+    params,
+    statics,
+    tokens: jax.Array,  # [B, S] int32
+    positions: jax.Array | None = None,  # [S]
+    cache=None,
+    cache_pos: jax.Array | None = None,
+    cache_len: jax.Array | None = None,
+    prefix_embeds: jax.Array | None = None,  # [B, P, d] (vlm stub)
+    frames: jax.Array | None = None,  # [B, enc_seq, d] (audio stub)
+):
+    """Forward pass.  Returns (logits [B, S(+P), vocab_padded], new_cache)."""
+    cfg: ModelConfig = statics["cfg"]
+    cdt = cfg.cdtype()
+    b, s = tokens.shape
+
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(cdt)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)  # gemma convention
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+        s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    if "dec_pos" in params:
+        x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(cdt)[None]
+    x = shard_activation(x, ("batch", "seq_shard", None))
+
+    memory = None
+    if cfg.encoder_layers:
+        if frames is not None:
+            memory = _encode(params, statics, cfg, frames)
+        elif cache is not None:
+            memory = cache.get("memory")
+
+    new_cache = {"prefix_layers": [], "body": []} if cache is not None else None
+
+    for i, (p, st) in enumerate(
+        zip(params["prefix_layers"], statics["prefix_layers"])
+    ):
+        c = cache["prefix_layers"][i] if cache is not None else None
+        x, nc = _apply_layer(
+            p, st, cfg, x, positions, c, cache_pos, cache_len, memory
+        )
+        if cache is not None:
+            new_cache["prefix_layers"].append(nc)
+
+    period = statics["period"]
+    if statics["n_periods"] > 0:
+        body_statics = statics["body"]
+
+        def period_fn(carry, xs):
+            x = carry
+            p_stk = xs[0]
+            c_stk = xs[1] if cache is not None else [None] * period
+            new_cs = []
+            for j in range(period):
+                xj, ncj = _apply_layer(
+                    p_stk[j], body_statics[j], cfg, x, positions,
+                    c_stk[j] if cache is not None else None,
+                    cache_pos, cache_len, memory,
+                )
+                x = xj
+                new_cs.append(ncj if cache is not None else jnp.zeros((), cdt))
+            return x, new_cs
+
+        fn = period_fn
+        if cfg.remat:
+            fn = jax.checkpoint(
+                period_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (params["body"], cache["body"] if cache is not None else None)
+        if cache is None:
+            xs = (params["body"],)
+            fn2 = lambda c, x_: fn(c, (x_[0], None))
+        else:
+            fn2 = fn
+        x, new_body = jax.lax.scan(fn2, x, xs)
+        if cache is not None:
+            new_cache["body"] = new_body
+
+    norm = rmsnorm if cfg.norm == "rmsnorm" else layernorm
+    hidden = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = hidden @ params["embed"]["w"].astype(cdt).T
+    else:
+        logits = linear(params["lm_head"], hidden)
+
+    if cache is not None and cfg.encoder_layers:
+        new_cache["memory"] = memory if memory is not None else cache.get("memory")
+
+    aux = {}
+    if cfg.mtp and cache is None:
+        # next-next-token head: combine hidden_t with embed(token_{t+1})
+        nxt = jnp.roll(tokens, -1, axis=1)
+        e_next = jnp.take(params["embed"]["w"], nxt, axis=0).astype(cdt)
+        norm_fn = rmsnorm if cfg.norm == "rmsnorm" else layernorm
+        h_mtp = linear(
+            params["mtp_proj"], jnp.concatenate([hidden, e_next], -1)
+        )
+        h_mtp, _ = _apply_layer(
+            params["mtp_layer"], statics["mtp_layer"], cfg, h_mtp, positions,
+            None, None, None, None,
+        )
+        h_mtp = norm_fn(params["mtp_norm"], h_mtp)
+        if cfg.tie_embeddings:
+            aux["mtp_logits"] = h_mtp @ params["embed"]["w"].astype(cdt).T
+        else:
+            aux["mtp_logits"] = linear(params["lm_head"], h_mtp)
+
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg: ModelConfig, active_only: bool = True) -> float:
+    """6*N(active)*FLOPs-per-token (MODEL_FLOPS for the roofline table)."""
+    d = cfg.d_model
+    n = 0
+    for mixer, ffn in cfg.layer_types:
+        if mixer in ("attn", "swa"):
+            n += d * cfg.n_heads * cfg.d_head * 2  # q + o
+            n += d * cfg.n_kv_heads * cfg.d_head * 2  # k + v
+        elif mixer == "xattn":
+            n += (d * cfg.n_heads * cfg.d_head * 2
+                  + d * cfg.n_kv_heads * cfg.d_head * 2) * 2
+        elif mixer == "mla":
+            m = cfg.mla
+            n += d * m.q_lora + m.q_lora * m.n_heads * (m.d_nope + m.d_rope)
+            n += d * (m.kv_lora + m.d_rope)
+            n += m.kv_lora * m.n_heads * (m.d_nope + m.d_v)
+            n += m.n_heads * m.d_v * d
+        elif mixer == "ssm":
+            sc = cfg.ssm
+            n += d * (2 * sc.d_inner + 2 * sc.n_groups * sc.d_state
+                      + sc.n_heads)
+            n += sc.d_inner * d
+        if ffn == "mlp":
+            mult = 3 if cfg.act == "swiglu" else 2
+            n += mult * d * cfg.d_ff
+        elif ffn == "moe":
+            mo = cfg.moe
+            active = mo.top_k if active_only else mo.n_experts
+            mult = 3 if mo.act == "swiglu" else 2
+            n += mult * d * mo.d_ff_expert * active
+            if mo.n_shared:
+                f_sh = mo.d_ff_shared or mo.n_shared * mo.d_ff_expert
+                n += mult * d * f_sh
+    n += cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return 6.0 * n

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    lion,
+    sgd,
+    cosine_schedule,
+    linear_warmup_cosine,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionState,
+    compress_gradients,
+    decompress_gradients,
+    error_feedback_allreduce,
+    init_compression_state,
+)

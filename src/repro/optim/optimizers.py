@@ -1,0 +1,144 @@
+"""Functional optimizers (AdamW / Lion / SGD), schedules and clipping.
+
+No external optimizer library: each optimizer is a pair of pure functions
+``init(params) -> state`` and ``update(grads, state, params, lr) ->
+(new_params, new_state)``, pytree-polymorphic, jit/pjit friendly.  Optimizer
+state inherits the parameter sharding (same tree structure + shapes), so
+pjit shards it with the params for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "lion",
+    "sgd",
+    "global_norm",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=mu_dtype)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1**c)
+            vhat = v / (1 - b2**c)
+            step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p - lr * step.astype(p.dtype)).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            direction = jnp.sign(b1 * m + (1 - b1) * g)
+            step = direction + weight_decay * p.astype(jnp.float32)
+            return (p - lr * step.astype(p.dtype)).astype(p.dtype), b2 * m + (1 - b2) * g
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p - lr * m.astype(p.dtype)).astype(p.dtype), m
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+
+    return lr
+
+
+def linear_warmup_cosine(
+    base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1
+):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), min_frac)
+
+    def lr(step):
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return lr

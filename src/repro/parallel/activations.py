@@ -1,0 +1,46 @@
+"""Activation sharding constraints (sequence parallelism between layers).
+
+The launcher installs a mesh + rules context; model code calls
+``shard_activation(x, spec)`` at layer boundaries.  Outside a context (unit
+tests, single-device smoke runs) it is a no-op, so model code never needs
+to know whether it is distributed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, logical_to_pspec
+
+__all__ = ["activation_sharding_ctx", "shard_activation", "current_mesh"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Mesh | None:
+    ctx = _CTX.get()
+    return ctx[0] if ctx is not None else None
+
+
+def shard_activation(x: jax.Array, spec: tuple[str | None, ...]) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    pspec = logical_to_pspec(spec, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))

@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP + pod axis).
+
+Every parameter leaf carries a tuple of *logical* axis names (its "spec");
+``logical_to_pspec`` resolves those through a rules table into a
+PartitionSpec for the active mesh.  Divisibility is checked: a dimension
+that does not divide evenly over its mesh axes falls back to replication
+(and the caller is expected to have padded anything that matters — heads
+and vocab are padded in the model configs precisely so the big tables do
+shard).
+
+Rules (defaults):
+  batch        -> ('pod', 'data')   data parallel, pods are extra DP
+  seq_shard    -> 'model'           sequence parallelism (residual stream
+                                    between layers, long KV caches)
+  heads/ff/... -> 'model'           tensor parallel
+  expert       -> 'model'           expert parallel (EP shares the TP axis:
+                                    activations are replicated across
+                                    'model' at the MoE boundary, each shard
+                                    runs its local experts, the down-proj
+                                    psum folds the combine)
+  embed/state  -> None              replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_pspec",
+    "tree_pspecs",
+    "tree_shardings",
+    "pad_to_multiple",
+    "padded_heads",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: tuple[tuple[str, tuple[str, ...] | None], ...]
+
+    def get(self, name: str) -> tuple[str, ...] | None:
+        for k, v in self.rules:
+            if k == name:
+                return v
+        raise KeyError(f"no sharding rule for logical axis {name!r}")
+
+
+DEFAULT_RULES = AxisRules(
+    rules=(
+        ("batch", ("pod", "data")),
+        ("data_only", ("data",)),
+        ("seq", None),
+        ("seq_shard", ("model",)),
+        ("embed", None),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("ff", ("model",)),
+        ("vocab", ("model",)),
+        ("expert", ("model",)),
+        ("tiles", ("model",)),  # block-pattern compressed weight tiles
+        ("kv_lora", None),
+        ("q_lora", None),
+        ("state", None),
+        ("conv", None),
+        ("layers", None),
+        ("unsharded", None),
+    )
+)
+
+
+def logical_to_pspec(
+    spec: tuple[str | None, ...] | None,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> P:
+    """Resolve a logical spec to a PartitionSpec, checking divisibility."""
+    if spec is None:
+        return P()
+    assert len(spec) == len(shape), f"spec {spec} vs shape {shape}"
+    out: list[Any] = []
+    for name, dim in zip(spec, shape):
+        if name is None:
+            out.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            out.append(None)  # replicate non-divisible dims
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(specs, shapes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Map logical-spec tree + shape tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda s, sh: logical_to_pspec(s, sh, mesh, rules),
+        specs,
+        shapes,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)),
+    )
+
+
+def tree_shardings(specs, shapes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    pspecs = tree_pspecs(specs, shapes, mesh, rules)
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def padded_heads(n_heads: int, shards: int = 16) -> int:
+    """Head count padded so the head axis shards (MaxText-style padding).
+
+    Padded heads carry zero weights in the in/out projections, so they are
+    numerically inert; they cost shards/(shards-pad) extra attention FLOPs,
+    which the roofline table reports honestly.
+    """
+    return pad_to_multiple(n_heads, shards)

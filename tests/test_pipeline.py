@@ -1,0 +1,43 @@
+"""GPipe pipeline parallelism — numerical parity with sequential fold."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, json
+    from jax.sharding import AxisType
+    from repro.parallel.pipeline import pipeline_apply
+
+    mesh = jax.make_mesh((4,), ('stage',), axis_types=(AxisType.Auto,))
+    L, D = 8, 16
+    ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
+    def layer(w, x):
+        return jnp.tanh(x @ w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 2, D))
+    y_pipe = pipeline_apply(layer, ws, x, mesh, 'stage')
+    def ref_one(xm):
+        for i in range(L):
+            xm = layer(ws[i], xm)
+        return xm
+    y_ref = jax.vmap(ref_one)(x)
+    print(json.dumps({'err': float(jnp.abs(y_pipe - y_ref).max())}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-6

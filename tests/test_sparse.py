@@ -1,0 +1,82 @@
+"""Block-pattern sparse layer (TPU adaptation, DESIGN §3) — properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import (
+    block_density,
+    build_block_pattern,
+    pattern_spmm_xla,
+)
+
+
+def test_lossless_when_weight_conforms(rng):
+    """If the dense weight already satisfies a <=P-mask block pattern, the
+    build is an exact (lossless) re-layout — mirrors the paper's claim that
+    mapping pattern-pruned weights loses nothing."""
+    k, n, block, tile = 512, 512, 64, 64
+    nb = k // block
+    dict_masks = rng.random((3, nb)) < 0.4
+    cols = rng.integers(0, 3, n)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    w *= np.repeat(dict_masks[cols].T, block, axis=0)
+    bp = build_block_pattern(w, num_patterns=3, density=0.5, block=block,
+                             tile=tile)
+    np.testing.assert_allclose(np.asarray(bp.dense()), w, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    num_patterns=st.integers(1, 6),
+    density=st.floats(0.1, 0.9),
+)
+def test_projection_properties(seed, num_patterns, density):
+    rng = np.random.default_rng(seed)
+    k, n = 256, 256
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    bp = build_block_pattern(w, num_patterns=num_patterns, density=density)
+    # dictionary size respected
+    assert bp.dict_masks.shape[0] <= num_patterns
+    # permutation is a permutation
+    assert sorted(bp.new_order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(bp.new_order[bp.inv_order], np.arange(n))
+    # projection only zeroes (dense recon is a masked version of w)
+    wd = np.asarray(bp.dense())
+    mask = wd != 0
+    np.testing.assert_allclose(wd[mask], w[mask], rtol=1e-6)
+    assert 0.0 < block_density(bp) <= 1.0
+
+
+def test_spmm_xla_grad_flows(rng):
+    """The compressed weight is trainable: gradients flow through the
+    gather/scan path (needed for projection-retraining)."""
+    import jax
+
+    k, n = 256, 256
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    bp = build_block_pattern(w, num_patterns=3, density=0.4)
+    x = jnp.asarray(rng.normal(size=(4, k)).astype(np.float32))
+
+    def loss(w_comp):
+        y = pattern_spmm_xla(x, w_comp, bp.block_ids, bp.block)
+        return jnp.sum(y**2)
+
+    g = jax.grad(loss)(bp.w_comp)
+    assert g.shape == bp.w_comp.shape
+    assert bool(jnp.any(g != 0))
+    assert not bool(jnp.any(jnp.isnan(g)))
+
+
+def test_flop_savings_accounting(rng):
+    """block_density == compressed FLOPs / dense FLOPs (the roofline win)."""
+    k, n = 512, 768
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    bp = build_block_pattern(w, num_patterns=4, density=0.25)
+    nb = k // bp.block
+    dense_flops = 2 * k * n
+    comp_flops = 2 * int(bp.nnz.sum()) * bp.block * bp.tile
+    assert comp_flops / dense_flops == pytest.approx(block_density(bp))
+    assert block_density(bp) < 0.7  # actually compresses
