@@ -1,0 +1,192 @@
+"""Dense ``cnn_apply`` vs compiled-engine execution, across sparsity levels.
+
+Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
+
+  * dense-vs-engine wall-clock per (network, sparsity),
+  * each compiled program's ``hardware_report()`` totals,
+  * a consistency check: compiling the Table-II-matched synthetic cifar10
+    network must reproduce ``core/simulator.simulate_dataset``'s per-layer
+    crossbar counts exactly (same pattern bits -> same ``map_layer``).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_engine [--out FILE] [--quick]
+
+As part of ``benchmarks.run`` it contributes the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+from repro.core.simulator import simulate_dataset
+from repro.core.synthetic import synthesize_network
+from repro.engine import compile_network, make_forward
+from repro.models.cnn import (
+    CNNConfig,
+    cnn_apply,
+    conv_weight_names,
+    init_cnn,
+    mini_cnn_config,
+    vgg16_config,
+)
+
+SPARSITIES = (0.5, 0.75, 0.9)
+
+
+def _pruned(cfg: CNNConfig, sparsity: float, num_patterns: int, seed: int):
+    params = init_cnn(cfg, jax.random.PRNGKey(seed))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, sparsity)
+    dicts = build_dictionaries(params, names, num_patterns)
+    return project_params(params, dicts)
+
+
+def _bench_network(name: str, cfg: CNNConfig, batch: int,
+                   sparsities=SPARSITIES) -> dict:
+    x = jax.random.normal(
+        jax.random.PRNGKey(0),
+        (batch, cfg.conv_channels[0][0], cfg.input_hw, cfg.input_hw),
+    )
+    entries = []
+    dense_fn = jax.jit(lambda p, xx: cnn_apply(cfg, p, xx))
+    for s in sparsities:
+        params, bits = _pruned(cfg, s, num_patterns=8, seed=1)
+        _, dense_us = timed(
+            lambda: jax.block_until_ready(dense_fn(params, x)), repeats=3
+        )
+        prog = compile_network(cfg, params, bits)
+        eng_fn = make_forward(prog, backend="xla")
+        out_eng, eng_us = timed(
+            lambda: jax.block_until_ready(eng_fn(x)), repeats=3
+        )
+        max_diff = float(
+            jnp.abs(out_eng - dense_fn(params, x)).max()
+        )
+        rep = prog.hardware_report()
+        comp_bytes, dense_bytes = prog.weight_bytes()
+        entries.append(
+            {
+                "sparsity": s,
+                "dense_us": dense_us,
+                "engine_us": eng_us,
+                "engine_vs_dense": eng_us / max(dense_us, 1e-9),
+                "max_abs_diff": max_diff,
+                "weight_bytes": comp_bytes,
+                "dense_weight_bytes": dense_bytes,
+                "hardware_report": {
+                    k: v for k, v in rep.items() if k != "layers"
+                },
+            }
+        )
+    return {"network": name, "batch": batch, "input_hw": cfg.input_hw,
+            "levels": entries}
+
+
+def _consistency_check() -> dict:
+    """Engine hardware_report vs simulate_dataset on identical bits."""
+    stats, layers = synthesize_network("cifar10", seed=0)
+    cfg = vgg16_config(num_classes=10, input_hw=stats.input_hw)
+    params = {}
+    bits = {}
+    for i, layer in enumerate(layers, start=1):
+        spec = layer.spec
+        params[f"conv{i}"] = {
+            "w": jnp.asarray(
+                layer.weights.reshape(spec.c_out, spec.c_in, 3, 3)
+            ),
+            "b": jnp.zeros((spec.c_out,), jnp.float32),
+        }
+        bits[f"conv{i}"] = layer.pattern_bits
+    c_last = cfg.conv_channels[-1][1]
+    params["fc"] = {
+        "w": jnp.zeros((c_last, cfg.num_classes), jnp.float32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    prog = compile_network(cfg, params, bits)
+    rep = prog.hardware_report()
+    sim = simulate_dataset("cifar10", seed=0)
+    engine_per_layer = [l["crossbars"] for l in rep["layers"]]
+    sim_per_layer = [l.ours_crossbars for l in sim.layers]
+    return {
+        "dataset": "cifar10",
+        "engine_crossbars": int(sum(engine_per_layer)),
+        "simulator_crossbars": int(sum(sim_per_layer)),
+        "per_layer_match": engine_per_layer == sim_per_layer,
+    }
+
+
+def collect(quick: bool = False) -> dict:
+    sparsities = SPARSITIES[1:2] if quick else SPARSITIES
+    report = {
+        "networks": [
+            _bench_network(
+                "mini_cnn",
+                mini_cnn_config(num_classes=4, input_hw=12,
+                                widths=(8, 16, 16)),
+                batch=8,
+                sparsities=sparsities,
+            ),
+            _bench_network(
+                "vgg16_cifar",
+                vgg16_config(num_classes=10, input_hw=32),
+                batch=2,
+                sparsities=sparsities,
+            ),
+        ],
+        "consistency": _consistency_check(),
+    }
+    return report
+
+
+def run():
+    """CSV rows for benchmarks.run."""
+    report = collect(quick=True)
+    for net in report["networks"]:
+        for lv in net["levels"]:
+            hw = lv["hardware_report"]
+            yield (
+                f"engine_{net['network']}_s{lv['sparsity']:.2f},"
+                f"{lv['engine_us']:.1f},"
+                f"dense_us={lv['dense_us']:.1f}"
+                f";crossbars={hw['crossbars']}"
+                f";area_eff={hw['area_efficiency']:.2f}"
+            )
+    c = report["consistency"]
+    yield (
+        f"engine_consistency,0.0,"
+        f"engine={c['engine_crossbars']}"
+        f";simulator={c['simulator_crossbars']}"
+        f";match={c['per_layer_match']}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
+    ap.add_argument("--quick", action="store_true",
+                    help="single sparsity level")
+    args = ap.parse_args()
+    report = collect(quick=args.quick)
+    payload = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(payload)
+    if not report["consistency"]["per_layer_match"]:
+        raise SystemExit("engine/simulator crossbar mismatch")
+
+
+if __name__ == "__main__":
+    main()

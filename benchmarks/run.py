@@ -16,12 +16,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_moe, bench_paper, \
-        bench_roofline
+    from benchmarks import bench_engine, bench_kernels, bench_moe, \
+        bench_paper, bench_roofline
 
     suites = {
         "paper": bench_paper.run,
         "kernels": bench_kernels.run,
+        "engine": bench_engine.run,
         "moe": bench_moe.run,
         "roofline": bench_roofline.run,
     }

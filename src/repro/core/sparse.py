@@ -34,6 +34,7 @@ import numpy as np
 __all__ = [
     "BlockPatternWeight",
     "build_block_pattern",
+    "nonzero_block_masks",
     "pattern_spmm_xla",
     "block_density",
 ]
@@ -126,32 +127,60 @@ def _project_masks_to_dictionary(
     return cand[choice]
 
 
+def nonzero_block_masks(w: np.ndarray, block: int) -> np.ndarray:
+    """Exact per-column block masks from the nonzero structure of ``w``.
+
+    w: [K, N] with K divisible by ``block``.  Returns bool [N, K//block];
+    a block is kept iff it holds at least one nonzero weight, so compressing
+    with these masks is lossless — the path the inference engine uses on
+    already-pruned weights.
+    """
+    w = np.asarray(w)
+    k_in, n_out = w.shape
+    if k_in % block:
+        raise ValueError(f"K={k_in} not divisible by block={block}")
+    return (w.reshape(k_in // block, block, n_out) != 0).any(axis=1).T
+
+
 def build_block_pattern(
     w: np.ndarray,
     num_patterns: int = 8,
     density: float = 0.25,
     block: int = 128,
     tile: int = 128,
+    masks: np.ndarray | None = None,
 ) -> BlockPatternWeight:
     """Pattern-prune + reorder + compress a dense [K, N] weight.
 
     Steps mirror the paper's flowchart (Fig 3) at block granularity:
     magnitude-driven block masks -> mask PDF -> top-P dictionary ->
     projection -> column reordering -> zero compression.
+
+    When ``masks`` ([N, K//block] bool) is given, the magnitude/projection
+    step is skipped and the supplied per-column block masks are used
+    verbatim (``num_patterns`` and ``density`` are ignored).  With
+    ``nonzero_block_masks(w, block)`` this makes the build an exact
+    re-layout of an already-pruned weight.
     """
     w = np.asarray(w, np.float32)
     k_in, n_out = w.shape
     if k_in % block or n_out % tile:
         raise ValueError(f"weight {w.shape} not divisible by ({block},{tile})")
     nb = k_in // block
-    keep = max(1, int(np.ceil(density * nb)))
 
-    energies = (w.reshape(nb, block, n_out) ** 2).sum(1).T  # [N, nB]
-    order = np.argsort(-energies, axis=1)
-    masks = np.zeros((n_out, nb), bool)
-    np.put_along_axis(masks, order[:, :keep], True, axis=1)
-
-    masks = _project_masks_to_dictionary(masks, energies, num_patterns)
+    if masks is None:
+        keep = max(1, int(np.ceil(density * nb)))
+        energies = (w.reshape(nb, block, n_out) ** 2).sum(1).T  # [N, nB]
+        order = np.argsort(-energies, axis=1)
+        masks = np.zeros((n_out, nb), bool)
+        np.put_along_axis(masks, order[:, :keep], True, axis=1)
+        masks = _project_masks_to_dictionary(masks, energies, num_patterns)
+    else:
+        masks = np.asarray(masks, bool)
+        if masks.shape != (n_out, nb):
+            raise ValueError(
+                f"masks shape {masks.shape} != (N={n_out}, K/block={nb})"
+            )
 
     # kernel reordering: group equal masks (lexicographic by mask bytes)
     mask_keys = np.array([m.tobytes() for m in masks])

@@ -1,0 +1,43 @@
+"""Inference engine: compile pattern-pruned CNNs into executable programs.
+
+The paper's deployment story made real: ``lowering`` turns pruned dense
+weights into compressed spmm operands (reorder -> compress -> index),
+``program`` is the compiled artifact (ops + geometry + crossbar pricing),
+``executor`` runs it through the Pallas/XLA kernels, ``serialize``
+persists it, and ``service`` serves traffic over it.
+
+Note: the model's BN stand-in normalises over *batch* statistics, so
+logits depend on which requests share a batch; ``InferenceService``
+therefore runs partial generations at their natural size instead of
+zero-padding dead slots.
+"""
+
+from repro.engine.executor import execute, extract_patches, make_forward
+from repro.engine.lowering import (
+    EngineConfig,
+    compile_network,
+    lower_conv,
+    lower_fc,
+    lower_matrix,
+)
+from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
+from repro.engine.serialize import load_program, save_program
+from repro.engine.service import ClassifyRequest, InferenceService
+
+__all__ = [
+    "EngineConfig",
+    "compile_network",
+    "lower_conv",
+    "lower_fc",
+    "lower_matrix",
+    "CompiledConv",
+    "CompiledFC",
+    "CompiledNetwork",
+    "make_forward",
+    "execute",
+    "extract_patches",
+    "save_program",
+    "load_program",
+    "ClassifyRequest",
+    "InferenceService",
+]

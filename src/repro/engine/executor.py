@@ -1,0 +1,126 @@
+"""Executor: run a ``CompiledNetwork`` through the Pallas/XLA spmm kernels.
+
+``make_forward`` returns a jitted batched forward: per conv layer it
+extracts im2col patches (conv-as-spmm), dispatches through
+``kernels/ops.pattern_spmm`` (Pallas TPU kernel, interpreted Pallas or XLA
+fallback on CPU) — which applies the stored inverse output permutation
+(the Output Indexing Unit) — then bias + shared ``channel_norm``/ReLU and
+the 2x2 maxpool where the schedule says so, matching ``cnn_apply`` on the
+pruned weights to numerical tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
+from repro.kernels.ops import pattern_spmm
+from repro.kernels.ops import _pad_to as _pad_axis_to_mult
+from repro.models.cnn import channel_norm, max_pool_2x2
+
+__all__ = ["extract_patches", "make_forward", "execute"]
+
+
+def extract_patches(x: jax.Array, k: int) -> jax.Array:
+    """im2col for stride-1 'same' convs: [B, C, H, W] -> [B, H, W, C*k*k].
+
+    Patch layout matches ``lowering.conv_matrix``: feature index is
+    ``c * k*k + (dy*k + dx)``.
+    """
+    b, c, h, w = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    taps = [
+        xp[:, :, dy : dy + h, dx : dx + w]
+        for dy in range(k)
+        for dx in range(k)
+    ]
+    patches = jnp.stack(taps, axis=-1)  # [B, C, H, W, k*k]
+    return patches.transpose(0, 2, 3, 1, 4).reshape(b, h, w, c * k * k)
+
+
+def _pad_features(x: jax.Array, to: int) -> jax.Array:
+    """Zero-pad the feature axis up to ``to`` (the bp's padded K).
+
+    The feature count never exceeds ``to``, so padding to a multiple of
+    ``to`` via the shared kernels helper lands exactly on ``to``.
+    """
+    assert x.shape[-1] <= to
+    return _pad_axis_to_mult(x, x.ndim - 1, to)
+
+
+def _run_conv(
+    op: CompiledConv,
+    x: jax.Array,
+    backend: str | None,
+    interpret: bool | None,
+    bm: int | None,
+) -> jax.Array:
+    b, c, h, w = x.shape
+    patches = extract_patches(x, op.kernel)  # [B, H, W, C*k*k]
+    patches = _pad_features(patches.reshape(b * h * w, -1), op.bp.k_in)
+    y = pattern_spmm(patches, op.bp, backend=backend, interpret=interpret,
+                     bm=bm)
+    y = y[:, : op.c_out] + jnp.asarray(op.bias)
+    y = y.reshape(b, h, w, op.c_out).transpose(0, 3, 1, 2)
+    y = jax.nn.relu(channel_norm(y))
+    if op.pool_after:
+        y = max_pool_2x2(y)
+    return y
+
+
+def _run_fc(
+    op: CompiledFC,
+    x: jax.Array,
+    backend: str | None,
+    interpret: bool | None,
+    bm: int | None,
+) -> jax.Array:
+    xf = _pad_features(x, op.bp.k_in)
+    y = pattern_spmm(xf, op.bp, backend=backend, interpret=interpret, bm=bm)
+    return y[:, : op.d_out] + jnp.asarray(op.bias)
+
+
+def make_forward(
+    program: CompiledNetwork,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    bm: int | None = None,
+):
+    """Build the jitted batched forward for ``program``.
+
+    Args:
+      backend: 'pallas' | 'xla' | None (auto: Pallas on TPU, XLA elsewhere).
+      interpret: force Pallas interpret mode (None: auto off-TPU).
+      bm: spmm row tile; None autotunes from the batch size.
+
+    Returns: fn(x: [B, C, H, W]) -> logits [B, num_classes].
+    """
+
+    def forward(x: jax.Array) -> jax.Array:
+        for op in program.convs:
+            x = _run_conv(op, x, backend, interpret, bm)
+        x = x.mean(axis=(2, 3))  # global average pool
+        return _run_fc(program.fc, x, backend, interpret, bm)
+
+    return jax.jit(forward)
+
+
+def execute(
+    program: CompiledNetwork,
+    x: jax.Array,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    bm: int | None = None,
+) -> jax.Array:
+    """One-shot convenience wrapper around :func:`make_forward`.
+
+    The jitted forward is cached on the program per dispatch options, so
+    repeated calls don't re-trace.
+    """
+    cache = program.__dict__.setdefault("_forward_cache", {})
+    key = (backend, interpret, bm)
+    if key not in cache:
+        cache[key] = make_forward(program, backend, interpret, bm)
+    return cache[key](x)

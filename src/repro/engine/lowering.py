@@ -1,0 +1,157 @@
+"""Lowering: pattern-pruned CNN params -> executable ``CompiledNetwork``.
+
+Per conv layer the dense weights ``[C_out, C_in, K, K]`` are viewed as the
+im2col matmul ``[C_in*K*K, C_out]``, zero-padded up to (block, tile)
+multiples, and compressed into a :class:`BlockPatternWeight` via the
+*exact* path of ``core/sparse.build_block_pattern``: block masks are the
+true nonzero structure (``nonzero_block_masks``), so reorder -> compress ->
+index produces real kernel operands and the compressed program computes
+bit-the-same weights as the pruned dense network.  The FC head is lowered
+onto the same path.
+
+Pattern bits (``core/pruning.PruneResult.pattern_bits``) ride along per
+layer so the compiled artifact can be priced on the crossbar model
+(``CompiledNetwork.hardware_report``); when absent they are recovered from
+the weights' nonzero masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.patterns import kernel_masks, masks_to_bits
+from repro.core.sparse import (
+    BlockPatternWeight,
+    build_block_pattern,
+    nonzero_block_masks,
+)
+from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
+from repro.models.cnn import CNNConfig
+
+__all__ = ["EngineConfig", "lower_matrix", "lower_conv", "lower_fc",
+           "compile_network"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Compile-time geometry of the spmm lowering.
+
+    Defaults match the Pallas kernel's MXU-aligned bricks; smaller values
+    trade alignment for finer-grained zero compression (useful on the XLA
+    CPU path where kernel-granular blocks expose the pruning sparsity).
+    """
+
+    block: int = 128
+    tile: int = 128
+
+
+def _pad_axis(a: np.ndarray, axis: int, mult: int) -> np.ndarray:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return np.pad(a, widths)
+
+
+def conv_matrix(w: np.ndarray) -> np.ndarray:
+    """[C_out, C_in, Kh, Kw] -> im2col matmul view [C_in*Kh*Kw, C_out].
+
+    Row index is ``c * Kh*Kw + (dy*Kw + dx)`` — the patch layout the
+    executor extracts.
+    """
+    w = np.asarray(w)
+    co = w.shape[0]
+    return w.reshape(co, -1).T
+
+
+def lower_matrix(
+    wm: np.ndarray, block: int, tile: int
+) -> BlockPatternWeight:
+    """Pad a dense [K, N] matrix to (block, tile) multiples and compress it
+    losslessly from its nonzero structure."""
+    wp = _pad_axis(_pad_axis(np.asarray(wm, np.float32), 0, block), 1, tile)
+    masks = nonzero_block_masks(wp, block)
+    return build_block_pattern(wp, block=block, tile=tile, masks=masks)
+
+
+def lower_conv(
+    name: str,
+    w: np.ndarray,
+    b: np.ndarray,
+    pattern_bits: np.ndarray | None,
+    out_hw: int,
+    pool_after: bool,
+    ecfg: EngineConfig,
+) -> CompiledConv:
+    w = np.asarray(w, np.float32)
+    c_out, c_in, kh, kw = w.shape
+    if kh != kw:
+        raise ValueError(f"{name}: non-square kernel {kh}x{kw}")
+    if pattern_bits is None:
+        pattern_bits = masks_to_bits(kernel_masks(w))
+    return CompiledConv(
+        name=name,
+        c_in=c_in,
+        c_out=c_out,
+        kernel=kh,
+        out_hw=out_hw,
+        pool_after=pool_after,
+        bp=lower_matrix(conv_matrix(w), ecfg.block, ecfg.tile),
+        bias=np.asarray(b, np.float32).copy(),
+        pattern_bits=np.asarray(pattern_bits, np.int64).copy(),
+    )
+
+
+def lower_fc(w: np.ndarray, b: np.ndarray, ecfg: EngineConfig) -> CompiledFC:
+    w = np.asarray(w, np.float32)
+    d_in, d_out = w.shape
+    return CompiledFC(
+        d_in=d_in,
+        d_out=d_out,
+        bp=lower_matrix(w, ecfg.block, ecfg.tile),
+        bias=np.asarray(b, np.float32).copy(),
+    )
+
+
+def compile_network(
+    cfg: CNNConfig,
+    params: dict,
+    pattern_bits: dict[str, np.ndarray] | None = None,
+    ecfg: EngineConfig = EngineConfig(),
+) -> CompiledNetwork:
+    """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
+
+    Args:
+      cfg: network geometry (``models.cnn.CNNConfig``).
+      params: parameter pytree ``{conv1: {w, b}, ..., fc: {w, b}}``.
+      pattern_bits: per-conv packed 3x3 pattern bitmasks
+        (``PruneResult.pattern_bits``); recovered from the weights' nonzero
+        structure for layers not listed.
+      ecfg: spmm lowering geometry.
+    """
+    pattern_bits = pattern_bits or {}
+    convs = []
+    hw = cfg.input_hw
+    for i in range(1, cfg.num_convs + 1):
+        name = f"conv{i}"
+        pool = i in cfg.pool_after
+        convs.append(
+            lower_conv(
+                name,
+                params[name]["w"],
+                params[name]["b"],
+                pattern_bits.get(name),
+                out_hw=hw,
+                pool_after=pool,
+                ecfg=ecfg,
+            )
+        )
+        if pool:
+            hw //= 2
+    fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg)
+    return CompiledNetwork(
+        config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile
+    )

@@ -1,0 +1,167 @@
+"""The ``CompiledNetwork`` artifact: what the engine compiler emits.
+
+A compiled program is an ordered op list — one ``CompiledConv`` per conv
+layer (im2col conv-as-spmm + norm/ReLU + optional 2x2 maxpool), a global
+average pool, and a ``CompiledFC`` head — each carrying real kernel
+operands (a :class:`~repro.core.sparse.BlockPatternWeight` with
+``w_comp`` / ``block_ids`` / ``inv_order``) rather than placement
+statistics.  ``executor.py`` runs it, ``serialize.py`` persists it, and
+:meth:`CompiledNetwork.hardware_report` prices it on the paper's RRAM
+crossbar model by reusing ``core/mapping.map_layer`` +
+``core/simulator.simulate_layer``, so every compiled program also knows
+its crossbar area / energy / cycle budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.crossbar import EnergyModel
+from repro.core.mapping import CrossbarConfig
+from repro.core.patterns import PatternDict
+from repro.core.simulator import simulate_layer
+from repro.core.sparse import BlockPatternWeight, block_density
+from repro.core.synthetic import LayerSpec, SyntheticLayer
+from repro.models.cnn import CNNConfig
+
+__all__ = ["CompiledConv", "CompiledFC", "CompiledNetwork"]
+
+
+@dataclasses.dataclass
+class CompiledConv:
+    """One conv layer lowered to an im2col spmm.
+
+    ``bp`` operates on the *padded* matmul view: patches padded from
+    ``c_in * kernel**2`` to ``bp.k_in`` rows, outputs padded from ``c_out``
+    to ``bp.n_out`` columns (the executor slices the first ``c_out`` back
+    out after the inverse permutation).
+    """
+
+    name: str
+    c_in: int
+    c_out: int
+    kernel: int  # spatial kernel side (3 for 3x3)
+    out_hw: int  # output feature-map side at compile-time input_hw
+    pool_after: bool
+    bp: BlockPatternWeight
+    bias: np.ndarray  # [c_out]
+    pattern_bits: np.ndarray  # [c_out, c_in] packed kernel patterns
+
+    @property
+    def k_unpadded(self) -> int:
+        return self.c_in * self.kernel * self.kernel
+
+
+@dataclasses.dataclass
+class CompiledFC:
+    """The FC head lowered onto the same compressed-spmm path."""
+
+    d_in: int
+    d_out: int
+    bp: BlockPatternWeight
+    bias: np.ndarray  # [d_out]
+
+
+@dataclasses.dataclass
+class CompiledNetwork:
+    """Executable artifact: ordered ops + geometry + hardware pricing."""
+
+    config: CNNConfig
+    convs: list[CompiledConv]
+    fc: CompiledFC
+    block: int
+    tile: int
+
+    @property
+    def num_ops(self) -> int:
+        # convs + global-avg-pool + fc
+        return len(self.convs) + 2
+
+    def op_list(self) -> list[tuple[str, str]]:
+        """Human-readable (op, detail) schedule, in execution order."""
+        ops = []
+        for c in self.convs:
+            d = (f"spmm[{c.bp.k_in}x{c.bp.n_out}] "
+                 f"density={block_density(c.bp):.2f} + norm/relu")
+            if c.pool_after:
+                d += " + maxpool2x2"
+            ops.append((c.name, d))
+        ops.append(("gap", "global average pool"))
+        ops.append(("fc", f"spmm[{self.fc.bp.k_in}x{self.fc.bp.n_out}]"))
+        return ops
+
+    def weight_bytes(self) -> tuple[int, int]:
+        """(compressed, dense) fp32 weight bytes across all spmm ops."""
+        comp = dense = 0
+        for c in self.convs:
+            comp += int(np.sum(c.bp.nnz)) * c.bp.block * c.bp.tile * 4
+            dense += c.k_unpadded * c.c_out * 4
+        comp += int(np.sum(self.fc.bp.nnz)) * self.fc.bp.block * self.fc.bp.tile * 4
+        dense += self.fc.d_in * self.fc.d_out * 4
+        return comp, dense
+
+    def hardware_report(
+        self,
+        config: CrossbarConfig = CrossbarConfig(),
+        energy: EnergyModel = EnergyModel(),
+    ) -> dict:
+        """Price the compiled convs on the paper's crossbar model.
+
+        Reuses ``core/mapping.map_layer`` (via ``simulate_layer``) on each
+        layer's 3x3 pattern bits, so crossbar counts agree exactly with
+        ``core/simulator.simulate_dataset`` for the same bits.  Activation
+        statistics are not replayed here (no skip discount); energies are
+        therefore the no-skip upper bound.
+        """
+        layers = []
+        for c in self.convs:
+            spec = LayerSpec(
+                name=c.name,
+                c_in=c.c_in,
+                c_out=c.c_out,
+                out_hw=c.out_hw,
+                kernel_size=c.kernel * c.kernel,
+            )
+            pdict = PatternDict(
+                k=spec.kernel_size,
+                patterns=tuple(int(b) for b in np.unique(c.pattern_bits)),
+            )
+            weights = np.zeros(
+                (c.c_out, c.c_in, spec.kernel_size), np.float32
+            )
+            layer = SyntheticLayer(
+                spec=spec, pdict=pdict,
+                pattern_bits=np.asarray(c.pattern_bits, np.int64),
+                weights=weights,
+            )
+            layers.append(simulate_layer(layer, None, config, energy))
+
+        def tot(attr):
+            return float(sum(getattr(r, attr) for r in layers))
+
+        return {
+            "layers": [
+                {
+                    "name": r.name,
+                    "crossbars": r.ours_crossbars,
+                    "naive_crossbars": r.naive_crossbars,
+                    "energy_pj": r.ours_energy_pj,
+                    "cycles": r.ours_cycles,
+                    "utilization": r.utilization,
+                    "index_bits": r.index_bits,
+                    "stored_kernels": r.stored_kernels,
+                    "total_kernels": r.total_kernels,
+                }
+                for r in layers
+            ],
+            "crossbars": int(tot("ours_crossbars")),
+            "naive_crossbars": int(tot("naive_crossbars")),
+            "area_efficiency": tot("naive_crossbars")
+            / max(tot("ours_crossbars"), 1.0),
+            "energy_pj": tot("ours_energy_pj"),
+            "naive_energy_pj": tot("naive_energy_pj"),
+            "cycles": tot("ours_cycles"),
+            "index_kb": tot("index_bits") / 8.0 / 1024.0,
+        }

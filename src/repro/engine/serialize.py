@@ -1,0 +1,185 @@
+"""Persist compiled programs so compilation is paid once per model.
+
+Layout mirrors ``checkpoint/checkpointer.py``: one ``.npy`` per array plus
+a fsynced ``program.json`` manifest, written into a ``.tmp`` directory and
+``os.replace``d only when complete, so a crashed writer never leaves a
+half-written program that a loader would pick up.  The round trip is
+bit-exact: every array is stored verbatim (float payloads as fp32, index
+streams as int32/int64).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BlockPatternWeight
+from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
+from repro.models.cnn import CNNConfig
+
+__all__ = ["save_program", "load_program"]
+
+_MANIFEST = "program.json"
+_FORMAT_VERSION = 1
+
+
+def _save_array(directory: str, name: str, arr) -> str:
+    fname = f"{name}.npy"
+    with open(os.path.join(directory, fname), "wb") as f:
+        np.save(f, np.asarray(arr))
+        f.flush()
+        os.fsync(f.fileno())
+    return fname
+
+
+def _bp_manifest(prefix: str, bp: BlockPatternWeight, directory: str) -> dict:
+    return {
+        "k_in": bp.k_in,
+        "n_out": bp.n_out,
+        "block": bp.block,
+        "tile": bp.tile,
+        "arrays": {
+            field: _save_array(directory, f"{prefix}.{field}", getattr(bp, field))
+            for field in ("w_comp", "block_ids", "nnz", "new_order",
+                          "inv_order", "dict_masks")
+        },
+    }
+
+
+def _load_bp(entry: dict, directory: str) -> BlockPatternWeight:
+    def arr(field):
+        return np.load(os.path.join(directory, entry["arrays"][field]))
+
+    return BlockPatternWeight(
+        w_comp=jnp.asarray(arr("w_comp")),
+        block_ids=jnp.asarray(arr("block_ids")),
+        nnz=arr("nnz"),
+        new_order=arr("new_order"),
+        inv_order=arr("inv_order"),
+        k_in=int(entry["k_in"]),
+        n_out=int(entry["n_out"]),
+        block=int(entry["block"]),
+        tile=int(entry["tile"]),
+        dict_masks=arr("dict_masks"),
+    )
+
+
+def save_program(directory: str, program: CompiledNetwork) -> str:
+    """Atomically write ``program`` under ``directory``.  Returns the path."""
+    parent = os.path.dirname(os.path.abspath(directory))
+    os.makedirs(parent, exist_ok=True)
+    tmp = directory.rstrip("/") + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    cfg = program.config
+    manifest = {
+        "format_version": _FORMAT_VERSION,
+        "block": program.block,
+        "tile": program.tile,
+        "config": {
+            "conv_channels": [list(c) for c in cfg.conv_channels],
+            "pool_after": sorted(cfg.pool_after),
+            "num_classes": cfg.num_classes,
+            "input_hw": cfg.input_hw,
+            "kernel": cfg.kernel,
+        },
+        "convs": [],
+    }
+    for c in program.convs:
+        manifest["convs"].append(
+            {
+                "name": c.name,
+                "c_in": c.c_in,
+                "c_out": c.c_out,
+                "kernel": c.kernel,
+                "out_hw": c.out_hw,
+                "pool_after": c.pool_after,
+                "bias": _save_array(tmp, f"{c.name}.bias", c.bias),
+                "pattern_bits": _save_array(
+                    tmp, f"{c.name}.pattern_bits", c.pattern_bits
+                ),
+                "bp": _bp_manifest(c.name, c.bp, tmp),
+            }
+        )
+    manifest["fc"] = {
+        "d_in": program.fc.d_in,
+        "d_out": program.fc.d_out,
+        "bias": _save_array(tmp, "fc.bias", program.fc.bias),
+        "bp": _bp_manifest("fc", program.fc.bp, tmp),
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    # never delete the previous program before the new one is in place:
+    # move it aside, swap in the new directory, then drop the old copy
+    old = directory.rstrip("/") + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(directory):
+        os.replace(directory, old)
+    os.replace(tmp, directory)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return directory
+
+
+def load_program(directory: str) -> CompiledNetwork:
+    """Load a program previously written by :func:`save_program`.
+
+    Falls back to ``<directory>.old`` when the target is missing — a save
+    interrupted between the two swap renames leaves the previous complete
+    program there, so a restarting service still has a model to load.
+    """
+    if not os.path.exists(os.path.join(directory, _MANIFEST)):
+        old = directory.rstrip("/") + ".old"
+        if os.path.exists(os.path.join(old, _MANIFEST)):
+            directory = old
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("format_version") != _FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported program format {manifest.get('format_version')!r}"
+        )
+    c = manifest["config"]
+    cfg = CNNConfig(
+        conv_channels=tuple(tuple(x) for x in c["conv_channels"]),
+        pool_after=frozenset(c["pool_after"]),
+        num_classes=c["num_classes"],
+        input_hw=c["input_hw"],
+        kernel=c["kernel"],
+    )
+    convs = [
+        CompiledConv(
+            name=e["name"],
+            c_in=e["c_in"],
+            c_out=e["c_out"],
+            kernel=e["kernel"],
+            out_hw=e["out_hw"],
+            pool_after=e["pool_after"],
+            bp=_load_bp(e["bp"], directory),
+            bias=np.load(os.path.join(directory, e["bias"])),
+            pattern_bits=np.load(os.path.join(directory, e["pattern_bits"])),
+        )
+        for e in manifest["convs"]
+    ]
+    fce = manifest["fc"]
+    fc = CompiledFC(
+        d_in=fce["d_in"],
+        d_out=fce["d_out"],
+        bp=_load_bp(fce["bp"], directory),
+        bias=np.load(os.path.join(directory, fce["bias"])),
+    )
+    return CompiledNetwork(
+        config=cfg,
+        convs=convs,
+        fc=fc,
+        block=manifest["block"],
+        tile=manifest["tile"],
+    )

@@ -1,0 +1,82 @@
+"""Traffic-serving front end for compiled programs.
+
+``InferenceService`` mirrors ``runtime/serve.py``'s ``ServeLoop`` control
+plane for the classification workload: a fixed number of batch slots, a
+request queue drained generation by generation, and per-request results
+written back onto the request objects.  Full generations hit one jitted
+batch shape; a partial final generation runs at its natural size (one
+extra trace per distinct size, at most ``batch_slots`` ever) rather than
+being zero-padded — the model's BN stand-in normalises over *batch*
+statistics, so padded dead slots would contaminate real requests' logits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.engine.executor import make_forward
+from repro.engine.program import CompiledNetwork
+
+__all__ = ["ClassifyRequest", "InferenceService"]
+
+
+@dataclasses.dataclass
+class ClassifyRequest:
+    """One image in, logits + argmax label out."""
+
+    image: np.ndarray  # [C, H, W]
+    logits: np.ndarray | None = None
+    label: int | None = None
+    done: bool = False
+
+
+class InferenceService:
+    """Slot-based batched classification over a jitted engine forward."""
+
+    def __init__(
+        self,
+        program: CompiledNetwork,
+        batch_slots: int = 8,
+        backend: str | None = None,
+        interpret: bool | None = None,
+    ):
+        self.program = program
+        self.batch_slots = batch_slots
+        self._forward = make_forward(
+            program, backend=backend, interpret=interpret
+        )
+        self.batches_run = 0
+
+    def _input_shape(self) -> tuple[int, int, int]:
+        cfg = self.program.config
+        return (cfg.conv_channels[0][0], cfg.input_hw, cfg.input_hw)
+
+    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyRequest]:
+        """Drain ``requests`` through the fixed-slot batch loop."""
+        shape = self._input_shape()
+        for start in range(0, len(requests), self.batch_slots):
+            batch = requests[start : start + self.batch_slots]
+            x = np.zeros((len(batch), *shape), np.float32)
+            for i, r in enumerate(batch):
+                img = np.asarray(r.image, np.float32)
+                if img.shape != shape:
+                    raise ValueError(
+                        f"request image {img.shape} != expected {shape}"
+                    )
+                x[i] = img
+            logits = np.asarray(jax.device_get(self._forward(x)))
+            self.batches_run += 1
+            for i, r in enumerate(batch):
+                r.logits = logits[i]
+                r.label = int(np.argmax(logits[i]))
+                r.done = True
+        return requests
+
+    def classify(self, images: np.ndarray) -> np.ndarray:
+        """Convenience: [N, C, H, W] -> labels [N]."""
+        reqs = [ClassifyRequest(image=img) for img in np.asarray(images)]
+        self.serve(reqs)
+        return np.array([r.label for r in reqs], np.int64)

@@ -39,14 +39,32 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _pick_bm(m: int, dtype) -> int:
+    """Row-tile for pattern_spmm, autotuned from the (static) batch M.
+
+    Serving batches are often tiny; padding 1 row up to bm=128 wastes a
+    128x factor of MXU work, so pick the smallest sublane-aligned tile that
+    covers M.  The floor keeps the second-minor dimension at the dtype's
+    minimum TPU tile (8 for 4-byte, 16 for 2-byte, 32 for 1-byte types).
+    """
+    floor = {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+    for cand in (8, 32, 128):
+        if m <= cand:
+            return max(cand, floor)
+    return 128
+
+
 def pattern_spmm(
     x: jax.Array,
     bp: BlockPatternWeight,
     backend: str | None = None,
     interpret: bool | None = None,
-    bm: int = 128,
+    bm: int | None = None,
 ) -> jax.Array:
-    """y = x @ W for a block-pattern compressed weight.  x: [..., K]."""
+    """y = x @ W for a block-pattern compressed weight.  x: [..., K].
+
+    ``bm=None`` (default) autotunes the row tile from the batch size.
+    """
     backend = backend or default_backend()
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
@@ -55,6 +73,8 @@ def pattern_spmm(
             interpret if interpret is not None else jax.default_backend() != "tpu"
         )
         m = xm.shape[0]
+        if bm is None:
+            bm = _pick_bm(m, xm.dtype)
         xp = _pad_to(xm, 0, bm)
         y = pattern_spmm_pallas(
             xp, bp.w_comp, bp.block_ids, block=bp.block, bm=bm, interpret=interp

@@ -17,7 +17,16 @@ import jax.numpy as jnp
 
 from repro.core.synthetic import VGG16_CONV_CHANNELS
 
-__all__ = ["CNNConfig", "vgg16_config", "mini_cnn_config", "init_cnn", "cnn_apply"]
+__all__ = [
+    "CNNConfig",
+    "vgg16_config",
+    "mini_cnn_config",
+    "init_cnn",
+    "cnn_apply",
+    "channel_norm",
+    "max_pool_2x2",
+    "conv_weight_names",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,18 +101,30 @@ def _conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
     )
 
 
+def channel_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-channel scale normalisation (BN stand-in, stateless).
+
+    Shared by ``cnn_apply`` and the compiled-engine executor so both paths
+    apply bit-identical normalisation.  x: [B, C, H, W].
+    """
+    return x / (jnp.std(x, axis=(0, 2, 3), keepdims=True) + eps)
+
+
+def max_pool_2x2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool.  x: [B, C, H, W]."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
 def cnn_apply(cfg: CNNConfig, params: dict, x: jax.Array) -> jax.Array:
     """Forward pass -> logits [B, num_classes].  x: [B, C, H, W]."""
     for i in range(1, cfg.num_convs + 1):
         p = params[f"conv{i}"]
         x = _conv2d(x, p["w"]) + p["b"][None, :, None, None]
-        # scale normalisation (BN stand-in, stateless) + ReLU
-        x = x / (jnp.std(x, axis=(0, 2, 3), keepdims=True) + 1e-5)
-        x = jax.nn.relu(x)
+        x = jax.nn.relu(channel_norm(x))
         if i in cfg.pool_after:
-            x = jax.lax.reduce_window(
-                x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
-            )
+            x = max_pool_2x2(x)
     x = x.mean(axis=(2, 3))  # global average pool
     return x @ params["fc"]["w"] + params["fc"]["b"]
 

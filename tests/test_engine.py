@@ -1,0 +1,238 @@
+"""Inference engine: lowering/executor parity, serialization, service."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.mapping import map_layer
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+from repro.core.sparse import block_density
+from repro.engine import (
+    ClassifyRequest,
+    EngineConfig,
+    InferenceService,
+    compile_network,
+    execute,
+    extract_patches,
+    load_program,
+    make_forward,
+    save_program,
+)
+from repro.models.cnn import (
+    cnn_apply,
+    conv_weight_names,
+    init_cnn,
+    mini_cnn_config,
+    vgg16_config,
+)
+
+BACKENDS = [("xla", None), ("pallas", True)]
+
+
+def _pruned_net(cfg, seed=0, sparsity=0.7, num_patterns=4):
+    params = init_cnn(cfg, jax.random.PRNGKey(seed))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, sparsity)
+    dicts = build_dictionaries(params, names, num_patterns)
+    return project_params(params, dicts)
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params, bits = _pruned_net(cfg)
+    return cfg, params, bits, compile_network(cfg, params, bits)
+
+
+def test_extract_patches_matches_conv(rng):
+    """im2col patches @ conv_matrix == lax conv (the lowering's premise)."""
+    from repro.engine.lowering import conv_matrix
+
+    x = jnp.asarray(rng.normal(size=(2, 3, 6, 6)).astype(np.float32))
+    w = rng.normal(size=(5, 3, 3, 3)).astype(np.float32)
+    patches = extract_patches(x, 3)  # [B, H, W, C*9]
+    y = patches.reshape(-1, 27) @ jnp.asarray(conv_matrix(w))
+    y = y.reshape(2, 6, 6, 5).transpose(0, 3, 1, 2)
+    ref = jax.lax.conv_general_dilated(
+        x, jnp.asarray(w), (1, 1), "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_lowering_is_lossless(mini):
+    """Compressed operands reconstruct the pruned dense weights exactly."""
+    from repro.engine.lowering import conv_matrix
+
+    cfg, params, bits, prog = mini
+    for i, op in enumerate(prog.convs, start=1):
+        wm = conv_matrix(np.asarray(params[f"conv{i}"]["w"]))
+        dense = np.asarray(op.bp.dense())[: wm.shape[0], : wm.shape[1]]
+        np.testing.assert_array_equal(dense.astype(np.float32), wm)
+        assert 0.0 < block_density(op.bp) <= 1.0
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_mini_cnn_parity(mini, backend, interpret):
+    cfg, params, bits, prog = mini
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 1, 12, 12))
+    ref = cnn_apply(cfg, params, x)
+    out = make_forward(prog, backend=backend, interpret=interpret)(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_vgg16_parity(backend, interpret):
+    cfg = vgg16_config(num_classes=10, input_hw=32)
+    params, bits = _pruned_net(cfg, seed=1, sparsity=0.86, num_patterns=8)
+    prog = compile_network(cfg, params, bits)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 32, 32))
+    ref = cnn_apply(cfg, params, x)
+    out = make_forward(prog, backend=backend, interpret=interpret)(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+def test_engine_config_small_blocks(mini):
+    """Non-default (block, tile) geometry stays exact."""
+    cfg, params, bits, _ = mini
+    prog = compile_network(cfg, params, bits,
+                           ecfg=EngineConfig(block=9, tile=8))
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 1, 12, 12))
+    ref = cnn_apply(cfg, params, x)
+    out = make_forward(prog, backend="xla")(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+def test_serialize_roundtrip_bit_exact(mini, tmp_path):
+    cfg, params, bits, prog = mini
+    path = save_program(str(tmp_path / "prog"), prog)
+    prog2 = load_program(path)
+
+    assert prog2.config == cfg
+    assert (prog2.block, prog2.tile) == (prog.block, prog.tile)
+    for a, b in zip(prog.convs, prog2.convs):
+        assert (a.name, a.c_in, a.c_out, a.kernel, a.out_hw, a.pool_after) \
+            == (b.name, b.c_in, b.c_out, b.kernel, b.out_hw, b.pool_after)
+        np.testing.assert_array_equal(np.asarray(a.bp.w_comp),
+                                      np.asarray(b.bp.w_comp))
+        np.testing.assert_array_equal(np.asarray(a.bp.block_ids),
+                                      np.asarray(b.bp.block_ids))
+        np.testing.assert_array_equal(a.bp.nnz, b.bp.nnz)
+        np.testing.assert_array_equal(a.bp.new_order, b.bp.new_order)
+        np.testing.assert_array_equal(a.bp.inv_order, b.bp.inv_order)
+        np.testing.assert_array_equal(a.bias, b.bias)
+        np.testing.assert_array_equal(a.pattern_bits, b.pattern_bits)
+    np.testing.assert_array_equal(np.asarray(prog.fc.bp.w_comp),
+                                  np.asarray(prog2.fc.bp.w_comp))
+    np.testing.assert_array_equal(prog.fc.bias, prog2.fc.bias)
+
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 1, 12, 12))
+    np.testing.assert_array_equal(
+        np.asarray(execute(prog, x, backend="xla")),
+        np.asarray(execute(prog2, x, backend="xla")),
+    )
+
+
+def test_save_is_atomic(mini, tmp_path):
+    """A second save over an existing program replaces it cleanly."""
+    *_, prog = mini
+    path = save_program(str(tmp_path / "prog"), prog)
+    path2 = save_program(str(tmp_path / "prog"), prog)
+    assert path == path2
+    load_program(path)  # still loadable, no stale .tmp / .old
+    import os
+    assert not os.path.exists(path + ".tmp")
+    assert not os.path.exists(path + ".old")
+
+
+def test_load_falls_back_to_old_after_interrupted_swap(mini, tmp_path):
+    """A save killed between the two swap renames leaves the previous
+    program at <dir>.old; load_program must still find it."""
+    import os
+
+    *_, prog = mini
+    path = save_program(str(tmp_path / "prog"), prog)
+    os.replace(path, path + ".old")  # simulate the crash window
+    prog2 = load_program(path)
+    np.testing.assert_array_equal(prog.fc.bias, prog2.fc.bias)
+
+
+def test_service_matches_forward(mini):
+    cfg, params, bits, prog = mini
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(11), (8, 1, 12, 12)),
+        np.float32,
+    )
+    svc = InferenceService(prog, batch_slots=8, backend="xla")
+    labels = svc.classify(x)
+    ref = np.asarray(make_forward(prog, backend="xla")(jnp.asarray(x)))
+    np.testing.assert_array_equal(labels, ref.argmax(-1))
+    assert svc.batches_run == 1
+
+    # two generations: 16 requests through 8 slots
+    reqs = [ClassifyRequest(image=img) for img in np.concatenate([x, x])]
+    svc.serve(reqs)
+    assert all(r.done and r.logits is not None for r in reqs)
+    np.testing.assert_array_equal(
+        [r.label for r in reqs[:8]], [r.label for r in reqs[8:]]
+    )
+    assert svc.batches_run == 3
+
+
+def test_service_partial_batch_not_padded(mini):
+    """A partial generation runs at natural size: results match the
+    reference forward on exactly those images (no zero-slot pollution of
+    the batch-statistic normalisation)."""
+    cfg, params, bits, prog = mini
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(13), (3, 1, 12, 12)),
+        np.float32,
+    )
+    svc = InferenceService(prog, batch_slots=8, backend="xla")
+    reqs = [ClassifyRequest(image=img) for img in x]
+    svc.serve(reqs)
+    ref = np.asarray(make_forward(prog, backend="xla")(jnp.asarray(x)))
+    np.testing.assert_allclose(
+        np.stack([r.logits for r in reqs]), ref, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_program_introspection(mini):
+    """op_list covers the whole schedule; weight_bytes matches the bricks."""
+    cfg, params, bits, prog = mini
+    ops = prog.op_list()
+    assert len(ops) == prog.num_ops == cfg.num_convs + 2
+    assert [name for name, _ in ops[:-2]] \
+        == [f"conv{i}" for i in range(1, cfg.num_convs + 1)]
+    assert ops[-1][0] == "fc"
+
+    comp, dense = prog.weight_bytes()
+    expect_comp = sum(
+        int(np.sum(op.bp.nnz)) * op.bp.block * op.bp.tile * 4
+        for op in [*prog.convs, prog.fc]
+    )
+    expect_dense = 4 * (
+        sum(c.c_in * 9 * c.c_out for c in prog.convs)
+        + prog.fc.d_in * prog.fc.d_out
+    )
+    assert (comp, dense) == (expect_comp, expect_dense)
+
+
+def test_hardware_report_consistent_with_mapping(mini):
+    """Report crossbar counts == direct map_layer on the same bits."""
+    cfg, params, bits, prog = mini
+    rep = prog.hardware_report()
+    expect = sum(
+        map_layer(bits[f"conv{i}"]).num_crossbars
+        for i in range(1, cfg.num_convs + 1)
+    )
+    assert rep["crossbars"] == expect
+    assert rep["naive_crossbars"] >= rep["crossbars"]
+    assert rep["energy_pj"] > 0 and rep["cycles"] > 0
+    assert len(rep["layers"]) == cfg.num_convs

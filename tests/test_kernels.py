@@ -55,6 +55,29 @@ def test_pattern_spmm_sweep(rng, m, k, n, block, tile, dtype):
     )
 
 
+def test_pattern_spmm_bm_autotune(rng):
+    """bm=None picks a sublane-aligned row tile from M; result unchanged."""
+    from repro.kernels.ops import _pick_bm
+
+    assert _pick_bm(1, jnp.float32) == 8
+    assert _pick_bm(8, jnp.float32) == 8
+    assert _pick_bm(20, jnp.float32) == 32
+    assert _pick_bm(200, jnp.float32) == 128
+    assert _pick_bm(1, jnp.bfloat16) == 16  # bf16 min sublane tile is 16
+    assert _pick_bm(100, jnp.bfloat16) == 128
+
+    k, n = 256, 256
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    bp = build_block_pattern(w, num_patterns=4, density=0.4)
+    for m in (1, 3, 17, 130):
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        y_auto = pattern_spmm(x, bp, backend="pallas", interpret=True)
+        y_ref = pattern_spmm(x, bp, backend="xla")
+        np.testing.assert_allclose(
+            np.asarray(y_auto), np.asarray(y_ref), rtol=2e-5, atol=2e-5
+        )
+
+
 def test_pattern_spmm_matches_dense_oracle(rng):
     """Compressed compute == dense matmul with the projected weight —
     the paper's central correctness claim at the kernel level."""

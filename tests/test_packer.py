@@ -1,0 +1,74 @@
+"""Packing invariants for core/mapping._Packer (no hypothesis needed).
+
+Exercises the strip-widening path of ``_Packer.place`` (a later block wider
+than the current strip) by using small crossbars and orders that mix block
+widths, and checks that for every ``block_order`` mode:
+
+  * placements never overlap within a crossbar and stay in bounds,
+  * cells_used + cells_wasted <= cells_total.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import CrossbarConfig, map_layer
+
+
+def _random_bits(rng, co, ci, n_pat=5, zero_frac=0.3, k=9):
+    pats = [0]
+    while len(pats) < n_pat + 1:
+        b = int(rng.integers(1, 2**k))
+        if b not in pats:
+            pats.append(b)
+    probs = np.full(n_pat + 1, (1 - zero_frac) / n_pat)
+    probs[0] = zero_frac
+    choice = rng.choice(len(pats), size=(co, ci), p=probs)
+    return np.array(pats)[choice]
+
+
+CONFIGS = [
+    CrossbarConfig(),  # paper geometry
+    CrossbarConfig(rows=64, cols=64, cells_per_weight=4),  # forces splits
+    CrossbarConfig(rows=32, cols=128, cells_per_weight=2),
+]
+
+
+@pytest.mark.parametrize("order", ["pattern", "channel", "width"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("config", CONFIGS, ids=["paper", "tiny", "wide"])
+def test_packer_invariants(order, seed, config):
+    rng = np.random.default_rng(seed)
+    co, ci = int(rng.integers(8, 48)), int(rng.integers(2, 12))
+    bits = _random_bits(rng, co, ci)
+    m = map_layer(bits, config, block_order=order)
+
+    assert m.cells_used + m.cells_wasted <= m.cells_total
+    assert m.utilization <= 1.0
+
+    by_xbar: dict[int, list] = {}
+    for p in m.placements:
+        assert 0 <= p.crossbar < m.num_crossbars
+        assert 0 <= p.row0 and p.row0 + p.height <= config.rows
+        assert 0 <= p.col0 and p.col0 + p.width_cells <= config.cols
+        assert p.width_cells == p.block.n_kernels * config.cells_per_weight
+        by_xbar.setdefault(p.crossbar, []).append(p)
+
+    for placements in by_xbar.values():
+        for i, a in enumerate(placements):
+            for b in placements[i + 1 :]:
+                row_overlap = (a.row0 < b.row0 + b.height
+                               and b.row0 < a.row0 + a.height)
+                col_overlap = (a.col0 < b.col0 + b.width_cells
+                               and b.col0 < a.col0 + a.width_cells)
+                assert not (row_overlap and col_overlap), (
+                    f"overlap on crossbar {a.crossbar}: {a} vs {b}"
+                )
+
+
+@pytest.mark.parametrize("order", ["pattern", "channel", "width"])
+def test_packer_stores_every_nonzero_kernel(order):
+    rng = np.random.default_rng(7)
+    bits = _random_bits(rng, 24, 6)
+    m = map_layer(bits, CrossbarConfig(rows=64, cols=64), block_order=order)
+    placed = sum(p.block.n_kernels for p in m.placements)
+    assert placed == m.stored_kernels == int((bits != 0).sum())
