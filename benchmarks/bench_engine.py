@@ -3,7 +3,11 @@
 Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
 
   * dense-vs-engine wall-clock per (network, sparsity),
-  * each compiled program's ``hardware_report()`` totals,
+  * each compiled program's ``hardware_report()`` totals, priced three
+    ways for the same compiled network: no-skip upper bound, an *assumed*
+    uniform skip probability (ASSUMED_SKIP), and the skip probabilities
+    *measured* on the bench activations by the stats-collecting forward —
+    plus the measured-vs-assumed energy delta,
   * a consistency check: compiling the Table-II-matched synthetic cifar10
     network must reproduce ``core/simulator.simulate_dataset``'s per-layer
     crossbar counts exactly (same pattern bits -> same ``map_layer``).
@@ -41,6 +45,11 @@ from repro.models.cnn import (
 )
 
 SPARSITIES = (0.5, 0.75, 0.9)
+# Fallback skip probability when no activations have been observed: ReLU
+# on roughly centred pre-activations zeroes ~half the inputs, so a
+# selection of one pattern's taps being all-zero is modelled coarsely as
+# 0.5 — precisely the kind of assumption the measured path replaces.
+ASSUMED_SKIP = 0.5
 
 
 def _pruned(cfg: CNNConfig, sparsity: float, num_patterns: int, seed: int):
@@ -72,7 +81,10 @@ def _bench_network(name: str, cfg: CNNConfig, batch: int,
         max_diff = float(
             jnp.abs(out_eng - dense_fn(params, x)).max()
         )
-        rep = prog.hardware_report()
+        _, stats = make_forward(prog, backend="xla", collect_stats=True)(x)
+        rep = prog.hardware_report(
+            skip_stats=stats, assumed_skip=ASSUMED_SKIP
+        )
         comp_bytes, dense_bytes = prog.weight_bytes()
         entries.append(
             {
@@ -83,6 +95,12 @@ def _bench_network(name: str, cfg: CNNConfig, batch: int,
                 "max_abs_diff": max_diff,
                 "weight_bytes": comp_bytes,
                 "dense_weight_bytes": dense_bytes,
+                "energy_pj_noskip": rep["energy_pj"],
+                "energy_pj_assumed": rep["energy_pj_assumed"],
+                "energy_pj_measured": rep["energy_pj_measured"],
+                "measured_vs_assumed_delta_pj":
+                    rep["skip"]["measured_vs_assumed_delta_pj"],
+                "measured_mean_skip": stats.mean_skip(),
                 "hardware_report": {
                     k: v for k, v in rep.items() if k != "layers"
                 },
@@ -160,6 +178,8 @@ def run():
                 f"dense_us={lv['dense_us']:.1f}"
                 f";crossbars={hw['crossbars']}"
                 f";area_eff={hw['area_efficiency']:.2f}"
+                f";e_measured_pj={lv['energy_pj_measured']:.0f}"
+                f";e_assumed_pj={lv['energy_pj_assumed']:.0f}"
             )
     c = report["consistency"]
     yield (

@@ -136,10 +136,33 @@ print(f"  hardware: {rep['crossbars']} crossbars "
       f"energy {rep['energy_pj']/1e3:.1f} nJ/img, "
       f"index {rep['index_kb']:.2f} KiB")
 
-service = InferenceService(program, batch_slots=16)
+service = InferenceService(program, batch_slots=16, collect_stats=True)
 labels = service.classify(np.asarray(x))
 acc_served = float((labels == np.asarray(y)).mean())
 print(f"[{time.time()-t0:5.1f}s] served {len(labels)} requests in "
       f"{service.batches_run} batches, accuracy {acc_served:.3f}")
+
+# -- 6. measured vs assumed energy --------------------------------------------
+# The service counted, per layer and OU row-group, how often an input
+# selection was all-zero on the traffic it actually served; pricing from
+# those *measured* skip probabilities replaces the assumed-probability
+# fallback (here 0.5 — "ReLU zeroes about half").
+rep_m = service.hardware_report(assumed_skip=0.5)
+skip = rep_m["skip"]
+print(f"energy pricing over {skip['measured_windows']} measured windows:")
+print(f"  no-skip upper bound : {skip['energy_pj_noskip']/1e3:8.1f} nJ/img")
+print(f"  assumed skip (p=0.5): {skip['energy_pj_assumed']/1e3:8.1f} nJ/img")
+print(f"  measured skip       : {skip['energy_pj_measured']/1e3:8.1f} nJ/img "
+      f"({skip['measured_discount']:.1%} below no-skip)")
+print(f"  measured - assumed  : "
+      f"{skip['measured_vs_assumed_delta_pj']/1e3:+8.1f} nJ/img "
+      f"({skip['measured_vs_assumed_delta_frac']:+.1%})")
+for lrow in rep_m["layers"]:
+    st = service.activation_stats.layers.get(lrow["name"])
+    if st is None:
+        continue
+    print(f"  {lrow['name']}: mean measured skip {st.mean_skip():.2f}, "
+          f"energy {lrow['energy_pj_measured']/1e3:.1f} nJ "
+          f"(no-skip {lrow['energy_pj']/1e3:.1f} nJ)")
 print("(full-scale VGG16 numbers: PYTHONPATH=src python -m benchmarks.run"
       " --only paper; engine bench: python -m benchmarks.bench_engine)")

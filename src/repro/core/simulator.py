@@ -41,6 +41,9 @@ from repro.core.synthetic import (
 __all__ = [
     "LayerResult",
     "SimulationReport",
+    "SkipDistribution",
+    "simulate_layer",
+    "simulate_layer_multi",
     "simulate_network",
     "simulate_dataset",
     "forward_zero_stats",
@@ -107,13 +110,56 @@ def forward_zero_stats(
     return stats
 
 
+@dataclasses.dataclass
+class SkipDistribution:
+    """Empirical all-zero-input-selection probabilities per OU row-group.
+
+    ``probs[(channel, pattern)]`` is the measured probability that the
+    input selection feeding an OU of that (channel, pattern bitmask) pair
+    is entirely zero — e.g. counted by the inference engine on real served
+    activations (``engine/stats.py``).  ``windows`` records the sample
+    size; pairs not measured fall back to ``default`` (an *assumed*
+    probability; 0.0 keeps the no-skip upper bound).
+    """
+
+    probs: dict[tuple[int, int], float] = dataclasses.field(
+        default_factory=dict
+    )
+    windows: int = 0
+    default: float = 0.0
+
+    def fraction(self, channel: int, pattern: int) -> float:
+        return float(
+            self.probs.get((int(channel), int(pattern)), self.default)
+        )
+
+
 def _skip_fractions(
-    sched: OUSchedule, zero_ind: np.ndarray | None
+    sched: OUSchedule, zero_ind: "np.ndarray | SkipDistribution | float | None"
 ) -> np.ndarray:
-    """Expected all-zero-input fraction per OU (0 if no stats / channel=-1)."""
+    """Expected all-zero-input fraction per OU (0 if no stats / channel=-1).
+
+    ``zero_ind`` selects the skip-probability source:
+      * None            — no skipping (upper-bound energy);
+      * float p         — *assumed* uniform probability p for every
+                          channel-attributed OU;
+      * SkipDistribution — *measured* per-(channel, pattern) probabilities;
+      * ndarray [W,C,k] — boolean zero indicators from a sampled forward
+                          pass (``forward_zero_stats``).
+    """
     n = len(sched)
     if zero_ind is None or n == 0:
         return np.zeros(n)
+    if isinstance(zero_ind, (int, float, np.integer, np.floating)):
+        return np.where(sched.channel >= 0, float(zero_ind), 0.0)
+    if isinstance(zero_ind, SkipDistribution):
+        skip = np.zeros(n)
+        for i in range(n):
+            ch = int(sched.channel[i])
+            if ch < 0:
+                continue
+            skip[i] = zero_ind.fraction(ch, int(sched.pattern[i]))
+        return skip
     skip = np.zeros(n)
     # group by (channel, pattern) — few unique pairs per layer
     pairs = {}
@@ -178,51 +224,73 @@ def _sched_energy_cycles(
     return total_e, cycles, breakdown
 
 
-def simulate_layer(
+def simulate_layer_multi(
     layer: SyntheticLayer,
-    zero_ind: np.ndarray | None,
+    skip_sources: dict,
     config: CrossbarConfig = CrossbarConfig(),
     energy: EnergyModel = EnergyModel(),
     naive_skips: bool = False,
-) -> LayerResult:
+) -> dict[str, LayerResult]:
+    """Price one layer under several skip-probability sources at once.
+
+    Mapping, OU schedules and the index stream depend only on the pattern
+    bits, so they are computed once and re-priced per entry of
+    ``skip_sources`` (name -> any ``_skip_fractions`` source) — pricing a
+    layer no-skip/assumed/measured costs one ``map_layer``, not three.
+    """
     spec = layer.spec
     windows = spec.out_hw * spec.out_hw
 
     mapping = map_layer(layer.pattern_bits, config, spec.kernel_size)
     sched_ours = pattern_ou_schedule(mapping)
-    skip_ours = _skip_fractions(sched_ours, zero_ind)
-    e_ours, cyc_ours, bd_ours = _sched_energy_cycles(
-        sched_ours, skip_ours, windows, energy
-    )
-
     naive = map_layer_naive(spec.c_out, spec.c_in, spec.kernel_size, config)
     sched_nv = naive_ou_schedule(naive)
-    skip_nv = (
-        _skip_fractions(sched_nv, zero_ind)
-        if naive_skips
-        else np.zeros(len(sched_nv))
-    )
-    e_nv, cyc_nv, bd_nv = _sched_energy_cycles(sched_nv, skip_nv, windows, energy)
-
     stream = build_index_stream(mapping)
     idx = index_overhead_bits(stream)
 
-    return LayerResult(
-        name=spec.name,
-        windows=windows,
-        naive_crossbars=naive.num_crossbars,
-        ours_crossbars=mapping.num_crossbars,
-        naive_energy_pj=e_nv,
-        ours_energy_pj=e_ours,
-        naive_cycles=cyc_nv,
-        ours_cycles=cyc_ours,
-        naive_breakdown=bd_nv,
-        ours_breakdown=bd_ours,
-        index_bits=idx["total_bits"],
-        stored_kernels=mapping.stored_kernels,
-        total_kernels=mapping.total_kernels,
-        utilization=mapping.utilization,
-    )
+    out = {}
+    for key, zero_ind in skip_sources.items():
+        skip_ours = _skip_fractions(sched_ours, zero_ind)
+        e_ours, cyc_ours, bd_ours = _sched_energy_cycles(
+            sched_ours, skip_ours, windows, energy
+        )
+        skip_nv = (
+            _skip_fractions(sched_nv, zero_ind)
+            if naive_skips
+            else np.zeros(len(sched_nv))
+        )
+        e_nv, cyc_nv, bd_nv = _sched_energy_cycles(
+            sched_nv, skip_nv, windows, energy
+        )
+        out[key] = LayerResult(
+            name=spec.name,
+            windows=windows,
+            naive_crossbars=naive.num_crossbars,
+            ours_crossbars=mapping.num_crossbars,
+            naive_energy_pj=e_nv,
+            ours_energy_pj=e_ours,
+            naive_cycles=cyc_nv,
+            ours_cycles=cyc_ours,
+            naive_breakdown=bd_nv,
+            ours_breakdown=bd_ours,
+            index_bits=idx["total_bits"],
+            stored_kernels=mapping.stored_kernels,
+            total_kernels=mapping.total_kernels,
+            utilization=mapping.utilization,
+        )
+    return out
+
+
+def simulate_layer(
+    layer: SyntheticLayer,
+    zero_ind: "np.ndarray | SkipDistribution | float | None",
+    config: CrossbarConfig = CrossbarConfig(),
+    energy: EnergyModel = EnergyModel(),
+    naive_skips: bool = False,
+) -> LayerResult:
+    return simulate_layer_multi(
+        layer, {"_": zero_ind}, config, energy, naive_skips
+    )["_"]
 
 
 @dataclasses.dataclass

@@ -4,7 +4,9 @@ The paper's deployment story made real: ``lowering`` turns pruned dense
 weights into compressed spmm operands (reorder -> compress -> index),
 ``program`` is the compiled artifact (ops + geometry + crossbar pricing),
 ``executor`` runs it through the Pallas/XLA kernels, ``serialize``
-persists it, and ``service`` serves traffic over it.
+persists it, ``service`` serves traffic over it, and ``stats`` measures
+activation-skip statistics on the served traffic so the crossbar energy
+pricing uses observed (not assumed) skip probabilities.
 
 Note: the model's BN stand-in normalises over *batch* statistics, so
 logits depend on which requests share a batch; ``InferenceService``
@@ -23,6 +25,12 @@ from repro.engine.lowering import (
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.engine.serialize import load_program, save_program
 from repro.engine.service import ClassifyRequest, InferenceService
+from repro.engine.stats import (
+    ActivationStats,
+    LayerSkipStats,
+    skip_patterns_and_masks,
+    stats_from_counts,
+)
 
 __all__ = [
     "EngineConfig",
@@ -40,4 +48,8 @@ __all__ = [
     "load_program",
     "ClassifyRequest",
     "InferenceService",
+    "ActivationStats",
+    "LayerSkipStats",
+    "skip_patterns_and_masks",
+    "stats_from_counts",
 ]

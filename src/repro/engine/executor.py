@@ -7,14 +7,29 @@ fallback on CPU) — which applies the stored inverse output permutation
 (the Output Indexing Unit) — then bias + shared ``channel_norm``/ReLU and
 the 2x2 maxpool where the schedule says so, matching ``cnn_apply`` on the
 pruned weights to numerical tolerance.
+
+With ``collect_stats=True`` the forward additionally counts, per layer
+and per OU row-group (= (input channel, pattern) pair), how many input
+selections were entirely zero — the quantity the paper's Input
+Preprocessing Unit skips on.  The counters are plain masked reductions
+over the very patches the spmm consumes, so they are jit-compatible and
+backend-agnostic: they ride alongside both the Pallas and the XLA spmm
+dispatch unchanged.  ``engine/stats.py`` aggregates them and
+``CompiledNetwork.hardware_report`` prices energy/cycles from them.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
+from repro.engine.stats import (
+    ActivationStats,
+    skip_patterns_and_masks,
+    stats_from_counts,
+)
 from repro.kernels.ops import pattern_spmm
 from repro.kernels.ops import _pad_to as _pad_axis_to_mult
 from repro.models.cnn import channel_norm, max_pool_2x2
@@ -50,16 +65,42 @@ def _pad_features(x: jax.Array, to: int) -> jax.Array:
     return _pad_axis_to_mult(x, x.ndim - 1, to)
 
 
+def zero_selection_counts(
+    patches: jax.Array, c_in: int, kk: int, masks: np.ndarray
+) -> jax.Array:
+    """Count all-zero input selections per OU row-group.
+
+    patches: [M, c_in*kk] unpadded im2col windows; masks: [P, kk] bool,
+    the layer's pattern position masks (``skip_patterns_and_masks``).
+    Returns int32 [c_in, P]: entry (c, i) is the number of windows whose
+    channel-c activations at ``masks[i]``'s positions are all zero — the
+    selections the Input Preprocessing Unit would skip.  The all-zero
+    pattern selects nothing and counts every window (vacuous all()).
+    """
+    m = patches.shape[0]
+    z = patches.reshape(m, c_in, 1, kk) == 0.0
+    keep = jnp.asarray(masks)[None, None]  # [1, 1, P, kk]
+    all_zero = jnp.all(z | ~keep, axis=-1)  # [M, C, P]
+    return all_zero.sum(axis=0, dtype=jnp.int32)
+
+
 def _run_conv(
     op: CompiledConv,
     x: jax.Array,
     backend: str | None,
     interpret: bool | None,
     bm: int | None,
-) -> jax.Array:
+    stat_masks: np.ndarray | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
     b, c, h, w = x.shape
     patches = extract_patches(x, op.kernel)  # [B, H, W, C*k*k]
-    patches = _pad_features(patches.reshape(b * h * w, -1), op.bp.k_in)
+    patches = patches.reshape(b * h * w, -1)
+    counts = None
+    if stat_masks is not None:
+        counts = zero_selection_counts(
+            patches, op.c_in, op.kernel * op.kernel, stat_masks
+        )
+    patches = _pad_features(patches, op.bp.k_in)
     y = pattern_spmm(patches, op.bp, backend=backend, interpret=interpret,
                      bm=bm)
     y = y[:, : op.c_out] + jnp.asarray(op.bias)
@@ -67,7 +108,7 @@ def _run_conv(
     y = jax.nn.relu(channel_norm(y))
     if op.pool_after:
         y = max_pool_2x2(y)
-    return y
+    return y, counts
 
 
 def _run_fc(
@@ -82,11 +123,23 @@ def _run_fc(
     return y[:, : op.d_out] + jnp.asarray(op.bias)
 
 
+def _layer_windows(program: CompiledNetwork, x_shape) -> dict[str, int]:
+    """Windows (input positions) each conv layer sees for this input."""
+    b, _, h, w = x_shape
+    windows = {}
+    for op in program.convs:
+        windows[op.name] = b * h * w
+        if op.pool_after:
+            h, w = h // 2, w // 2
+    return windows
+
+
 def make_forward(
     program: CompiledNetwork,
     backend: str | None = None,
     interpret: bool | None = None,
     bm: int | None = None,
+    collect_stats: bool = False,
 ):
     """Build the jitted batched forward for ``program``.
 
@@ -94,17 +147,47 @@ def make_forward(
       backend: 'pallas' | 'xla' | None (auto: Pallas on TPU, XLA elsewhere).
       interpret: force Pallas interpret mode (None: auto off-TPU).
       bm: spmm row tile; None autotunes from the batch size.
+      collect_stats: also measure per-layer all-zero-selection counts.
 
-    Returns: fn(x: [B, C, H, W]) -> logits [B, num_classes].
+    Returns: fn(x: [B, C, H, W]) -> logits [B, num_classes], or, with
+    ``collect_stats``, fn(x) -> (logits, :class:`ActivationStats`).
     """
-
-    def forward(x: jax.Array) -> jax.Array:
+    stat_masks = {}
+    if collect_stats:
         for op in program.convs:
-            x = _run_conv(op, x, backend, interpret, bm)
-        x = x.mean(axis=(2, 3))  # global average pool
-        return _run_fc(program.fc, x, backend, interpret, bm)
+            _, masks = skip_patterns_and_masks(
+                op.pattern_bits, op.kernel * op.kernel
+            )
+            stat_masks[op.name] = masks
 
-    return jax.jit(forward)
+    def forward(x: jax.Array):
+        counts = {}
+        for op in program.convs:
+            x, cnt = _run_conv(
+                op, x, backend, interpret, bm, stat_masks.get(op.name)
+            )
+            if cnt is not None:
+                counts[op.name] = cnt
+        x = x.mean(axis=(2, 3))  # global average pool
+        logits = _run_fc(program.fc, x, backend, interpret, bm)
+        return (logits, counts) if collect_stats else logits
+
+    jitted = jax.jit(forward)
+    if not collect_stats:
+        return jitted
+
+    def forward_with_stats(
+        x: jax.Array,
+    ) -> tuple[jax.Array, ActivationStats]:
+        logits, counts = jitted(x)
+        stats = stats_from_counts(
+            program.convs,
+            {k: np.asarray(v) for k, v in counts.items()},
+            _layer_windows(program, x.shape),
+        )
+        return logits, stats
+
+    return forward_with_stats
 
 
 def execute(

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.crossbar import EnergyModel
 from repro.core.mapping import CrossbarConfig
 from repro.core.patterns import PatternDict
-from repro.core.simulator import simulate_layer
+from repro.core.simulator import simulate_layer_multi
 from repro.core.sparse import BlockPatternWeight, block_density
 from repro.core.synthetic import LayerSpec, SyntheticLayer
 from repro.models.cnn import CNNConfig
@@ -102,19 +102,8 @@ class CompiledNetwork:
         dense += self.fc.d_in * self.fc.d_out * 4
         return comp, dense
 
-    def hardware_report(
-        self,
-        config: CrossbarConfig = CrossbarConfig(),
-        energy: EnergyModel = EnergyModel(),
-    ) -> dict:
-        """Price the compiled convs on the paper's crossbar model.
-
-        Reuses ``core/mapping.map_layer`` (via ``simulate_layer``) on each
-        layer's 3x3 pattern bits, so crossbar counts agree exactly with
-        ``core/simulator.simulate_dataset`` for the same bits.  Activation
-        statistics are not replayed here (no skip discount); energies are
-        therefore the no-skip upper bound.
-        """
+    def _synthetic_layers(self) -> list[SyntheticLayer]:
+        """The convs as ``SyntheticLayer``s for crossbar-model pricing."""
         layers = []
         for c in self.convs:
             spec = LayerSpec(
@@ -131,37 +120,145 @@ class CompiledNetwork:
             weights = np.zeros(
                 (c.c_out, c.c_in, spec.kernel_size), np.float32
             )
-            layer = SyntheticLayer(
+            layers.append(SyntheticLayer(
                 spec=spec, pdict=pdict,
                 pattern_bits=np.asarray(c.pattern_bits, np.int64),
                 weights=weights,
-            )
-            layers.append(simulate_layer(layer, None, config, energy))
+            ))
+        return layers
 
-        def tot(attr):
-            return float(sum(getattr(r, attr) for r in layers))
+    def hardware_report(
+        self,
+        config: CrossbarConfig = CrossbarConfig(),
+        energy: EnergyModel = EnergyModel(),
+        skip_stats=None,
+        assumed_skip: float | None = None,
+    ) -> dict:
+        """Price the compiled convs on the paper's crossbar model.
 
-        return {
-            "layers": [
-                {
-                    "name": r.name,
-                    "crossbars": r.ours_crossbars,
-                    "naive_crossbars": r.naive_crossbars,
-                    "energy_pj": r.ours_energy_pj,
-                    "cycles": r.ours_cycles,
-                    "utilization": r.utilization,
-                    "index_bits": r.index_bits,
-                    "stored_kernels": r.stored_kernels,
-                    "total_kernels": r.total_kernels,
-                }
-                for r in layers
-            ],
-            "crossbars": int(tot("ours_crossbars")),
-            "naive_crossbars": int(tot("naive_crossbars")),
-            "area_efficiency": tot("naive_crossbars")
-            / max(tot("ours_crossbars"), 1.0),
-            "energy_pj": tot("ours_energy_pj"),
-            "naive_energy_pj": tot("naive_energy_pj"),
-            "cycles": tot("ours_cycles"),
-            "index_kb": tot("index_bits") / 8.0 / 1024.0,
+        Reuses ``core/mapping.map_layer`` (via ``simulate_layer``) on each
+        layer's 3x3 pattern bits, so crossbar counts agree exactly with
+        ``core/simulator.simulate_dataset`` for the same bits.
+
+        Energy/cycle pricing comes in up to three flavours:
+
+          * the no-skip upper bound (always; the historical ``energy_pj`` /
+            ``cycles`` keys are unchanged);
+          * *assumed*: a uniform scalar skip probability ``assumed_skip``
+            applied to every OU row-group — the fallback when no
+            activations have been observed;
+          * *measured*: per-(channel, pattern) probabilities counted on
+            real activations — pass an
+            :class:`~repro.engine.stats.ActivationStats` (from
+            ``make_forward(..., collect_stats=True)`` or
+            ``InferenceService``) or a mapping of layer name to
+            :class:`~repro.core.simulator.SkipDistribution`.
+
+        When both are given, the ``skip`` section reports the
+        measured-vs-assumed delta explicitly, so the gap between the
+        statistical assumption and the realized zero pattern is a
+        first-class output.  Layers without measured statistics fall back
+        to the no-skip bound inside the measured totals; the ``skip``
+        section's ``measured_layers`` lists which layers were actually
+        observed, and per-layer rows only carry ``energy_pj_measured``
+        when that layer was.
+        """
+        syn = self._synthetic_layers()
+
+        dists = {}
+        if skip_stats is not None:
+            # ActivationStats (engine/stats.py) or {name: SkipDistribution}
+            per_layer = getattr(skip_stats, "layers", skip_stats)
+            for c in self.convs:
+                entry = per_layer.get(c.name)
+                if entry is None:
+                    continue
+                to_dist = getattr(entry, "to_distribution", None)
+                dists[c.name] = to_dist() if to_dist is not None else entry
+        measured_windows = max(
+            (int(getattr(d, "windows", 0)) for d in dists.values()),
+            default=0,
+        )
+
+        # one mapping pass per layer, priced under every requested source
+        layers, assumed, measured = [], [], []
+        for c, layer in zip(self.convs, syn):
+            sources = {"noskip": None}
+            if assumed_skip is not None:
+                sources["assumed"] = float(assumed_skip)
+            if c.name in dists:
+                sources["measured"] = dists[c.name]
+            priced = simulate_layer_multi(layer, sources, config, energy)
+            layers.append(priced["noskip"])
+            assumed.append(priced.get("assumed"))
+            measured.append(priced.get("measured", priced["noskip"])
+                            if skip_stats is not None else None)
+        has_assumed = assumed_skip is not None
+        has_measured = skip_stats is not None
+
+        def tot(results, attr):
+            return float(sum(getattr(r, attr) for r in results))
+
+        layer_rows = []
+        for i, r in enumerate(layers):
+            row = {
+                "name": r.name,
+                "crossbars": r.ours_crossbars,
+                "naive_crossbars": r.naive_crossbars,
+                "energy_pj": r.ours_energy_pj,
+                "cycles": r.ours_cycles,
+                "utilization": r.utilization,
+                "index_bits": r.index_bits,
+                "stored_kernels": r.stored_kernels,
+                "total_kernels": r.total_kernels,
+            }
+            if has_assumed:
+                row["energy_pj_assumed"] = assumed[i].ours_energy_pj
+                row["cycles_assumed"] = assumed[i].ours_cycles
+            if self.convs[i].name in dists:
+                row["energy_pj_measured"] = measured[i].ours_energy_pj
+                row["cycles_measured"] = measured[i].ours_cycles
+            layer_rows.append(row)
+
+        rep = {
+            "layers": layer_rows,
+            "crossbars": int(tot(layers, "ours_crossbars")),
+            "naive_crossbars": int(tot(layers, "naive_crossbars")),
+            "area_efficiency": tot(layers, "naive_crossbars")
+            / max(tot(layers, "ours_crossbars"), 1.0),
+            "energy_pj": tot(layers, "ours_energy_pj"),
+            "naive_energy_pj": tot(layers, "naive_energy_pj"),
+            "cycles": tot(layers, "ours_cycles"),
+            "index_kb": tot(layers, "index_bits") / 8.0 / 1024.0,
         }
+
+        e_noskip = rep["energy_pj"]
+        e_assumed = tot(assumed, "ours_energy_pj") if has_assumed else None
+        e_measured = tot(measured, "ours_energy_pj") if has_measured else None
+        if has_assumed:
+            rep["energy_pj_assumed"] = e_assumed
+            rep["cycles_assumed"] = tot(assumed, "ours_cycles")
+        if has_measured:
+            rep["energy_pj_measured"] = e_measured
+            rep["cycles_measured"] = tot(measured, "ours_cycles")
+        rep["skip"] = {
+            "assumed_probability": assumed_skip,
+            "measured_windows": measured_windows,
+            "measured_layers": sorted(dists),
+            "energy_pj_noskip": e_noskip,
+            "energy_pj_assumed": e_assumed,
+            "energy_pj_measured": e_measured,
+            "measured_discount": (
+                None if e_measured is None
+                else 1.0 - e_measured / max(e_noskip, 1e-9)
+            ),
+            "measured_vs_assumed_delta_pj": (
+                None if e_measured is None or e_assumed is None
+                else e_measured - e_assumed
+            ),
+            "measured_vs_assumed_delta_frac": (
+                None if e_measured is None or e_assumed is None
+                else (e_measured - e_assumed) / max(e_assumed, 1e-9)
+            ),
+        }
+        return rep

@@ -8,6 +8,12 @@ batch shape; a partial final generation runs at its natural size (one
 extra trace per distinct size, at most ``batch_slots`` ever) rather than
 being zero-padded — the model's BN stand-in normalises over *batch*
 statistics, so padded dead slots would contaminate real requests' logits.
+
+With ``collect_stats=True`` every served batch also measures its
+activation-skip counters (``engine/stats.py``); the service accumulates
+them across requests into ``activation_stats``, so
+``service.hardware_report()`` prices energy from the skip probabilities
+*realized on the traffic actually served* rather than an assumption.
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ import numpy as np
 
 from repro.engine.executor import make_forward
 from repro.engine.program import CompiledNetwork
+from repro.engine.stats import ActivationStats
 
 __all__ = ["ClassifyRequest", "InferenceService"]
 
@@ -42,17 +49,30 @@ class InferenceService:
         batch_slots: int = 8,
         backend: str | None = None,
         interpret: bool | None = None,
+        collect_stats: bool = False,
     ):
         self.program = program
         self.batch_slots = batch_slots
+        self.collect_stats = collect_stats
         self._forward = make_forward(
-            program, backend=backend, interpret=interpret
+            program, backend=backend, interpret=interpret,
+            collect_stats=collect_stats,
         )
         self.batches_run = 0
+        self.activation_stats: ActivationStats | None = None
 
     def _input_shape(self) -> tuple[int, int, int]:
         cfg = self.program.config
         return (cfg.conv_channels[0][0], cfg.input_hw, cfg.input_hw)
+
+    def reset_stats(self) -> None:
+        self.activation_stats = None
+
+    def _record_stats(self, stats: ActivationStats) -> None:
+        self.activation_stats = (
+            stats if self.activation_stats is None
+            else self.activation_stats.merge(stats)
+        )
 
     def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyRequest]:
         """Drain ``requests`` through the fixed-slot batch loop."""
@@ -67,7 +87,11 @@ class InferenceService:
                         f"request image {img.shape} != expected {shape}"
                     )
                 x[i] = img
-            logits = np.asarray(jax.device_get(self._forward(x)))
+            out = self._forward(x)
+            if self.collect_stats:
+                out, stats = out
+                self._record_stats(stats)
+            logits = np.asarray(jax.device_get(out))
             self.batches_run += 1
             for i, r in enumerate(batch):
                 r.logits = logits[i]
@@ -80,3 +104,13 @@ class InferenceService:
         reqs = [ClassifyRequest(image=img) for img in np.asarray(images)]
         self.serve(reqs)
         return np.array([r.label for r in reqs], np.int64)
+
+    def hardware_report(self, assumed_skip: float | None = None, **kw) -> dict:
+        """Crossbar pricing from the skip statistics of the served traffic.
+
+        Falls back to the program's assumed/no-skip pricing when no
+        requests have been served with ``collect_stats`` yet.
+        """
+        return self.program.hardware_report(
+            skip_stats=self.activation_stats, assumed_skip=assumed_skip, **kw
+        )

@@ -36,7 +36,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_NAMES, SHAPES, runnable, skip_reason
-from repro.launch.hlo_stats import parse_hlo_stats
+from repro.launch.hlo_stats import cost_analysis_dict, parse_hlo_stats
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.models.transformer import model_flops_per_token
@@ -134,7 +134,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_stats(hlo)  # per-appearance counts (no loop mult)
 

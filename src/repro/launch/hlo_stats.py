@@ -28,7 +28,27 @@ import dataclasses
 import re
 from collections import defaultdict
 
-__all__ = ["HLOStats", "parse_hlo_stats"]
+__all__ = ["HLOStats", "parse_hlo_stats", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    Older jax returns a per-device list of dicts (usually length 1; summed
+    here so 'flops' stays the per-program total), newer jax returns the
+    dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, dict):
+        return cost
+    out: dict = {}
+    for entry in cost or []:
+        for k, v in entry.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+            else:
+                out.setdefault(k, v)
+    return out
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -115,6 +135,40 @@ def _parse_computations(text: str):
     return comps, entry
 
 
+def _split_operands(arglist: str) -> list[str]:
+    """Split an HLO operand list on top-level commas.
+
+    Operand tokens may carry inline types whose dims/layouts contain commas
+    (``f32[64,128]{1,0} %arg``), so a plain ``split(',')`` is wrong.
+    """
+    out, depth, cur = [], 0, []
+    for ch in arglist:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [t for t in out if t]
+
+
+def _operand_type(token: str, shapes: dict[str, str]) -> str:
+    """Type string of one operand token.
+
+    Newer XLA prints the type inline (``f32[64,128]{1,0} %name``); older
+    text has only ``%name`` and the type comes from the computation's
+    result-type symbol table.
+    """
+    if _SHAPE_RE.search(token):
+        return token
+    return shapes.get(token.strip().lstrip("%"), "")
+
+
 def _dot_flops(rhs: str, shapes: dict[str, str]) -> float:
     # result type is the prefix of rhs up to ' dot('
     mres = _SHAPE_RE.search(rhs)
@@ -126,8 +180,8 @@ def _dot_flops(rhs: str, shapes: dict[str, str]) -> float:
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
     if not (mops and mc):
         return 2.0 * res_elems  # dot with unknown contraction: lower bound
-    lhs_name = mops.group(1).split(",")[0].strip().lstrip("%")
-    lhs_type = shapes.get(lhs_name, "")
+    operands = _split_operands(mops.group(1))
+    lhs_type = _operand_type(operands[0], shapes) if operands else ""
     dims_m = _SHAPE_RE.search(lhs_type)
     if not dims_m:
         return 2.0 * res_elems
@@ -188,8 +242,14 @@ def parse_hlo_stats(text: str) -> HLOStats:
             if " while(" in rhs:
                 mbody = re.search(r"body=%?([\w.\-]+)", rhs)
                 mcond = re.search(r"condition=%?([\w.\-]+)", rhs)
-                trip = None
-                if mcond:
+                # XLA annotates statically-known loops directly; prefer that
+                # over reverse-engineering the condition's constant.
+                mknown = re.search(
+                    r"known_trip_count[\"':={\s]+n[\"':\s]*[:=]?\s*\"?(\d+)",
+                    rhs,
+                )
+                trip = int(mknown.group(1)) if mknown else None
+                if trip is None and mcond:
                     trip = _while_trip(mcond.group(1), comps, shapes_by_comp)
                 if trip is None:
                     trip = 1
@@ -236,8 +296,8 @@ def parse_hlo_stats(text: str) -> HLOStats:
                 mops = re.search(r"dot\(([^)]*)\)", rhs)
                 ob = 0
                 if mops:
-                    for op in mops.group(1).split(","):
-                        t_op = tbl.get(op.strip().lstrip("%"), "")
+                    for op in _split_operands(mops.group(1)):
+                        t_op = _operand_type(op, tbl)
                         _, b = _shape_info(t_op)
                         ob += b
                         if _score_like(t_op):

@@ -8,27 +8,40 @@ Single pod: (data=16, model=16) — 256 chips (v5e pod).
 Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the pod axis is pure
 data parallelism (gradient all-reduce crosses DCN), which is also where
 gradient compression applies.
+
+``make_mesh`` is the version-portable constructor every caller (and test)
+should use: newer jax grew ``jax.sharding.AxisType`` and a required-ish
+``axis_types`` kwarg on ``jax.make_mesh``, older jax has neither.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+try:  # jax >= 0.5 explicit-sharding API
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax <= 0.4.x: meshes are implicitly 'auto'
+    _AxisType = None
+
+__all__ = ["make_mesh", "make_production_mesh", "make_local_mesh"]
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API has them."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _AxisType is not None:
+        kwargs["axis_types"] = (_AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices exist (tests)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_mesh((data, model), ("data", "model"))

@@ -78,9 +78,9 @@ def test_sharded_train_matches_single_device():
     computes the same loss as the single-device step."""
     res = _run_sub(8, """
     import jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.configs import get_smoke_config
     from repro.models.transformer import init_params
+    from repro.launch.mesh import make_mesh
     from repro.launch.steps import param_shardings
     from repro.optim import adamw
     from repro.parallel.activations import activation_sharding_ctx
@@ -99,8 +99,7 @@ def test_sharded_train_matches_single_device():
     _, m1 = jax.jit(step)(jax.tree.map(lambda x: x, state), batch)
 
     # 4x2 mesh
-    mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ('data', 'model'))
     shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
     p_shard = param_shardings(specs, shapes, mesh)
     state2 = init_train_state(jax.tree.map(jax.device_put, params, p_shard), opt, tcfg)
@@ -117,10 +116,10 @@ def test_sharded_train_matches_single_device():
 def test_moe_shard_map_matches_local():
     res = _run_sub(8, """
     import jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.models.moe import MoEConfig, moe_init, moe_apply, _moe_local
     from repro.parallel.activations import activation_sharding_ctx
-    mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ('data', 'model'))
     cfg = MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff_expert=16,
                     model_shards=2, capacity_factor=8.0)
     params, _, static = moe_init(jax.random.PRNGKey(0), cfg)
@@ -140,8 +139,9 @@ def test_mini_dryrun_single_and_multipod():
     full-size equivalent is launch/dryrun.py)."""
     res = _run_sub(16, """
     import jax.numpy as jnp, dataclasses
-    from jax.sharding import AxisType
     from repro.configs import get_smoke_config
+    from repro.launch.hlo_stats import cost_analysis_dict
+    from repro.launch.mesh import make_mesh
     from repro.launch.steps import build_step
     from repro.configs.base import ShapeSpec
     shape = ShapeSpec('mini', 'train', 64, 8)
@@ -150,12 +150,12 @@ def test_mini_dryrun_single_and_multipod():
         'single': ((4, 4), ('data', 'model')),
         'multi': ((2, 2, 4), ('pod', 'data', 'model')),
     }.items():
-        mesh = jax.make_mesh(dims, axes, axis_types=(AxisType.Auto,)*len(dims))
+        mesh = make_mesh(dims, axes)
         cfg = dataclasses.replace(get_smoke_config('granite_3_2b'),
                                   model_shards=4)
         built = build_step('granite_3_2b', shape, mesh, cfg=cfg)
         compiled = built.fn.lower(*built.args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         out[name] = float(cost.get('flops', 0))
     print(json.dumps(out))
     """)
@@ -169,16 +169,15 @@ def test_elastic_remesh_restore(tmp_path):
     the elastic-scaling path after losing nodes."""
     res = _run_sub(8, f"""
     import jax.numpy as jnp
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import save_checkpoint, restore_checkpoint
-    mesh8 = jax.make_mesh((8,), ('data',), axis_types=(AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh8 = make_mesh((8,), ('data',))
     x = jnp.arange(64.0).reshape(8, 8)
     xs = jax.device_put(x, NamedSharding(mesh8, P('data')))
     save_checkpoint({str(tmp_path)!r}, 3, {{'x': xs}})
     # re-mesh to 4 devices (simulating node loss)
-    mesh4 = jax.make_mesh((4,), ('data',),
-                          axis_types=(AxisType.Auto,),
-                          devices=jax.devices()[:4])
+    mesh4 = make_mesh((4,), ('data',), devices=jax.devices()[:4])
     shard4 = {{'x': NamedSharding(mesh4, P('data'))}}
     out = restore_checkpoint({str(tmp_path)!r}, 3, {{'x': x}}, shardings=shard4)
     ok = bool((out['x'] == x).all()) and len(out['x'].sharding.device_set) == 4

@@ -1,0 +1,288 @@
+"""Measured activation-skip statistics: counters vs numpy reference,
+aggregation, and energy pricing monotonicity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.simulator import SkipDistribution
+from repro.engine import (
+    InferenceService,
+    compile_network,
+    make_forward,
+    skip_patterns_and_masks,
+)
+from repro.engine.executor import zero_selection_counts
+from repro.engine.stats import ActivationStats, LayerSkipStats
+from repro.models.cnn import (
+    conv_weight_names,
+    init_cnn,
+    mini_cnn_config,
+)
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+
+
+def _reference_counts(patches: np.ndarray, c_in: int, kk: int,
+                      masks: np.ndarray) -> np.ndarray:
+    """Independent numpy double-loop: all-zero selections per (c, p)."""
+    m = patches.shape[0]
+    z = (patches.reshape(m, c_in, kk) == 0.0)
+    counts = np.zeros((c_in, masks.shape[0]), np.int64)
+    for c in range(c_in):
+        for i, mask in enumerate(masks):
+            pos = np.nonzero(mask)[0]
+            if pos.size == 0:
+                counts[c, i] = m  # all-zero pattern: vacuously skippable
+            else:
+                counts[c, i] = int(np.all(z[:, c, pos], axis=1).sum())
+    return counts
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, 0.7)
+    dicts = build_dictionaries(params, names, 4)
+    params, bits = project_params(params, dicts)
+    return cfg, params, bits, compile_network(cfg, params, bits)
+
+
+MASKS = np.array([
+    [1, 1, 0, 0, 1, 0, 0, 0, 0],
+    [0, 0, 0, 0, 0, 0, 0, 1, 1],
+    [1, 1, 1, 1, 1, 1, 1, 1, 1],
+    [0, 0, 0, 0, 0, 0, 0, 0, 0],  # the all-zero pattern
+], bool)
+
+
+@pytest.mark.parametrize("case", ["zero_columns", "dense", "mixed"])
+def test_counts_match_numpy_reference_on_crafted_activations(case, rng):
+    """The jitted counter equals the double-loop reference on crafted
+    inputs: whole channels zero, fully dense, and a random zero mixture."""
+    m, c_in, kk = 64, 5, 9
+    if case == "zero_columns":
+        a = rng.normal(size=(m, c_in, kk)).astype(np.float32)
+        a[np.abs(a) < 0.05] = 0.0
+        a[:, 1, :] = 0.0  # an all-zero channel: every selection skips
+        a[:, 3, :5] = 0.0  # partial: skips only patterns inside taps 0..4
+    elif case == "dense":
+        a = rng.normal(size=(m, c_in, kk)).astype(np.float32)
+        a[a == 0.0] = 1.0  # no zeros: only the all-zero pattern skips
+    else:
+        a = rng.normal(size=(m, c_in, kk)).astype(np.float32)
+        a[rng.random(size=a.shape) < 0.6] = 0.0
+    patches = a.reshape(m, c_in * kk)
+    got = np.asarray(
+        jax.jit(
+            lambda p: zero_selection_counts(p, c_in, kk, MASKS)
+        )(jnp.asarray(patches))
+    )
+    expect = _reference_counts(patches, c_in, kk, MASKS)
+    np.testing.assert_array_equal(got, expect)
+    if case == "zero_columns":
+        assert (got[1] == m).all()  # the dead channel always skips
+    if case == "dense":
+        # only the all-zero pattern (row 3 of MASKS) is skippable
+        assert (got[:, :3] == 0).all() and (got[:, 3] == m).all()
+
+
+def test_forward_stats_match_reference_on_first_layer(mini, rng):
+    """End-to-end: the executor's conv1 counters equal the reference
+    computed from an independent numpy im2col of the same input."""
+    cfg, params, bits, prog = mini
+    x = rng.normal(size=(3, 1, 12, 12)).astype(np.float32)
+    x[np.abs(x) < 0.3] = 0.0  # plant real zeros in the input image
+    logits, stats = make_forward(prog, backend="xla", collect_stats=True)(
+        jnp.asarray(x)
+    )
+    op = prog.convs[0]
+    kk = op.kernel * op.kernel
+    patterns, masks = skip_patterns_and_masks(op.pattern_bits, kk)
+    assert stats.layers["conv1"].patterns == patterns
+
+    # independent im2col (stride-1 'same'), layout c*kk + (dy*k + dx)
+    b, c, h, w = x.shape
+    k, pad = op.kernel, op.kernel // 2
+    xp = np.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    taps = np.stack(
+        [xp[:, :, dy:dy + h, dx:dx + w] for dy in range(k) for dx in range(k)],
+        axis=-1,
+    )  # [B, C, H, W, kk]
+    patches = taps.transpose(0, 2, 3, 1, 4).reshape(b * h * w, c * kk)
+    expect = _reference_counts(patches, c, kk, masks)
+
+    st = stats.layers["conv1"]
+    np.testing.assert_array_equal(st.counts, expect)
+    assert st.windows == b * h * w
+    # logits unchanged by the instrumentation
+    ref = make_forward(prog, backend="xla")(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+def test_backends_agree_on_counts(mini):
+    cfg, params, bits, prog = mini
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 1, 12, 12))
+    _, s_xla = make_forward(prog, backend="xla", collect_stats=True)(x)
+    _, s_pal = make_forward(
+        prog, backend="pallas", interpret=True, collect_stats=True
+    )(x)
+    for name in s_xla.layers:
+        np.testing.assert_array_equal(
+            s_xla.layers[name].counts, s_pal.layers[name].counts
+        )
+
+
+def test_stats_merge_accumulates(mini):
+    cfg, params, bits, prog = mini
+    fwd = make_forward(prog, backend="xla", collect_stats=True)
+    xa = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 12, 12))
+    xb = jax.random.normal(jax.random.PRNGKey(2), (3, 1, 12, 12))
+    _, sa = fwd(xa)
+    _, sb = fwd(xb)
+    merged = sa.merge(sb)
+    _, sab = fwd(jnp.concatenate([xa, xb]))
+    for name in sab.layers:
+        assert merged.layers[name].windows == sab.layers[name].windows
+        # deeper layers see batch-statistic normalisation, so only conv1's
+        # counts are batch-composition independent
+    np.testing.assert_array_equal(
+        merged.layers["conv1"].counts, sab.layers["conv1"].counts
+    )
+
+
+def test_service_accumulates_stats(mini):
+    cfg, params, bits, prog = mini
+    svc = InferenceService(prog, batch_slots=4, backend="xla",
+                           collect_stats=True)
+    imgs = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(11), (10, 1, 12, 12)),
+        np.float32,
+    )
+    svc.classify(imgs)
+    assert svc.batches_run == 3  # 4 + 4 + 2
+    assert svc.activation_stats.layers["conv1"].windows == 10 * 12 * 12
+    rep = svc.hardware_report(assumed_skip=0.5)
+    assert rep["energy_pj_measured"] <= rep["energy_pj"]
+    assert rep["skip"]["measured_windows"] == 10 * 12 * 12
+    svc.reset_stats()
+    assert svc.activation_stats is None
+
+
+def _uniform_stats(prog, frac: float) -> ActivationStats:
+    """Synthetic measured stats: every (channel, pattern) skips `frac`."""
+    windows = 1000
+    layers = {}
+    for op in prog.convs:
+        kk = op.kernel * op.kernel
+        patterns, _ = skip_patterns_and_masks(op.pattern_bits, kk)
+        counts = np.full(
+            (op.c_in, len(patterns)), int(frac * windows), np.int64
+        )
+        layers[op.name] = LayerSkipStats(
+            name=op.name, kernel_size=kk, patterns=patterns,
+            windows=windows, counts=counts,
+        )
+    return ActivationStats(layers=layers)
+
+
+def test_energy_strictly_decreases_with_measured_sparsity(mini):
+    cfg, params, bits, prog = mini
+    energies = [
+        prog.hardware_report(
+            skip_stats=_uniform_stats(prog, f)
+        )["energy_pj_measured"]
+        for f in (0.0, 0.25, 0.5, 0.75)
+    ]
+    assert all(a > b for a, b in zip(energies, energies[1:])), energies
+    # zero measured sparsity reproduces the no-skip upper bound
+    assert energies[0] == pytest.approx(prog.hardware_report()["energy_pj"])
+
+
+def test_assumed_path_matches_uniform_distribution(mini):
+    """The scalar assumed-probability fallback equals a SkipDistribution
+    with the same probability everywhere."""
+    cfg, params, bits, prog = mini
+    p = 0.3
+    via_scalar = prog.hardware_report(assumed_skip=p)["energy_pj_assumed"]
+    dists = {
+        op.name: SkipDistribution(probs={}, windows=0, default=p)
+        for op in prog.convs
+    }
+    via_dist = prog.hardware_report(skip_stats=dists)["energy_pj_measured"]
+    assert via_scalar == pytest.approx(via_dist)
+
+
+def test_assumed_accepts_int_and_np_scalars(mini):
+    """The scalar fallback is type-robust: int 0 and np.float32 work."""
+    cfg, params, bits, prog = mini
+    noskip = prog.hardware_report()["energy_pj"]
+    assert prog.hardware_report(assumed_skip=0)["energy_pj_assumed"] \
+        == pytest.approx(noskip)
+    assert prog.hardware_report(
+        assumed_skip=np.float32(0.3)
+    )["energy_pj_assumed"] == pytest.approx(
+        prog.hardware_report(assumed_skip=0.3)["energy_pj_assumed"]
+    )
+
+
+def test_partial_measurement_coverage_is_explicit(mini):
+    """Layers without measured stats price at no-skip inside the measured
+    total, and the report says exactly which layers were observed."""
+    cfg, params, bits, prog = mini
+    only_conv1 = {"conv1": SkipDistribution(probs={}, windows=50,
+                                            default=0.5)}
+    rep = prog.hardware_report(skip_stats=only_conv1)
+    assert rep["skip"]["measured_layers"] == ["conv1"]
+    rows = {r["name"]: r for r in rep["layers"]}
+    assert "energy_pj_measured" in rows["conv1"]
+    assert "energy_pj_measured" not in rows["conv2"]
+    # total = measured conv1 + no-skip rest
+    expect = rows["conv1"]["energy_pj_measured"] + sum(
+        rows[n]["energy_pj"] for n in rows if n != "conv1"
+    )
+    assert rep["energy_pj_measured"] == pytest.approx(expect)
+
+
+def test_mean_skip_excludes_all_zero_pattern():
+    """The vacuous always-skip column of the all-zero pattern must not
+    inflate the summary statistic."""
+    st = LayerSkipStats(
+        name="conv", kernel_size=9, patterns=(0, 7), windows=100,
+        counts=np.array([[100, 10], [100, 30]], np.int64),
+    )
+    assert st.mean_skip() == pytest.approx(0.2)  # (10 + 30) / 200
+    weighted = LayerSkipStats(
+        name="conv", kernel_size=9, patterns=(0, 7), windows=100,
+        counts=np.array([[100, 10], [100, 30]], np.int64),
+        occurrences=np.array([[2, 3], [1, 1]], np.int64),
+    )
+    # (10*3 + 30*1) / (100 * 4); the pattern-0 occurrences don't count
+    assert weighted.mean_skip() == pytest.approx(60 / 400)
+
+
+def test_report_delta_section(mini):
+    cfg, params, bits, prog = mini
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 1, 12, 12))
+    _, stats = make_forward(prog, backend="xla", collect_stats=True)(x)
+    rep = prog.hardware_report(skip_stats=stats, assumed_skip=0.5)
+    skip = rep["skip"]
+    assert skip["assumed_probability"] == 0.5
+    assert skip["energy_pj_noskip"] == rep["energy_pj"]
+    assert skip["measured_vs_assumed_delta_pj"] == pytest.approx(
+        rep["energy_pj_measured"] - rep["energy_pj_assumed"]
+    )
+    # per-layer rows carry all three pricings
+    for row in rep["layers"]:
+        assert row["energy_pj_measured"] <= row["energy_pj"]
+        assert "energy_pj_assumed" in row
+    # legacy keys keep their no-skip meaning
+    plain = prog.hardware_report()
+    assert plain["energy_pj"] == rep["energy_pj"]
+    assert plain["crossbars"] == rep["crossbars"]

@@ -15,10 +15,10 @@ def test_pipeline_matches_sequential():
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, json
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.parallel.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ('stage',), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ('stage',))
     L, D = 8, 16
     ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
     def layer(w, x):

@@ -139,4 +139,12 @@ def test_microbatching_matches_full_batch(tmp_path):
     deltas = jax.tree.map(
         lambda a, b: float(jnp.abs(a - b).max()), outs[1][1], outs[4][1]
     )
-    assert max(jax.tree.leaves(deltas)) < 1e-4
+    # Adam's first-step update is lr*g/(|g|+eps) — unit magnitude whatever
+    # the gradient scale — so for weights whose gradient sits near the fp32
+    # accumulation noise floor, the two summation orders (one 8-row backward
+    # vs four 2-row backwards averaged) legitimately move the parameter by
+    # a noise-directed fraction of lr, not of gradient precision.  The
+    # losses above agree to 1e-5 rel; bound the post-optimizer drift at 5%
+    # of one step (observed max ~1.9% of lr on CPU).
+    lr = 1e-2
+    assert max(jax.tree.leaves(deltas)) < 0.05 * lr
