@@ -8,6 +8,13 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
     uniform skip probability (ASSUMED_SKIP), and the skip probabilities
     *measured* on the bench activations by the stats-collecting forward —
     plus the measured-vs-assumed energy delta,
+  * a 1-vs-N-device sharded-execution entry: the same compiled program
+    run unsharded and tile/batch-sharded over a mesh of N virtualized
+    host devices (subprocess, ``--xla_force_host_platform_device_count``),
+    recording both wall-clocks, the speedup, and the max output
+    difference.  On virtualized CPU devices the "speedup" mostly measures
+    collective overhead — the entry exists so the TPU run has a number to
+    replace,
   * a consistency check: compiling the Table-II-matched synthetic cifar10
     network must reproduce ``core/simulator.simulate_dataset``'s per-layer
     crossbar counts exactly (same pattern bits -> same ``map_layer``).
@@ -22,6 +29,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -110,6 +121,79 @@ def _bench_network(name: str, cfg: CNNConfig, batch: int,
             "levels": entries}
 
 
+# The backend must see the forced host-device count before it initializes,
+# so the sharded comparison runs in a subprocess (same pattern as
+# tests/test_distributed.py).
+_SHARDED_BODY = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import json, time
+import jax, numpy as np
+from repro.core.pruning import (build_dictionaries, magnitude_prune,
+                                project_params)
+from repro.engine import compile_network, make_forward, partition_network
+from repro.launch.mesh import make_mesh
+from repro.models.cnn import conv_weight_names, init_cnn, mini_cnn_config
+
+cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+params = init_cnn(cfg, jax.random.PRNGKey(1))
+names = conv_weight_names(cfg)
+params = magnitude_prune(params, names, {sparsity})
+dicts = build_dictionaries(params, names, 8)
+params, bits = project_params(params, dicts)
+prog = compile_network(cfg, params, bits)
+x = jax.random.normal(jax.random.PRNGKey(0), ({batch}, 1, 12, 12))
+
+
+def timed(fn, repeats=5):
+    out = jax.block_until_ready(fn())  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = jax.block_until_ready(fn())
+    return out, (time.perf_counter() - t0) / repeats * 1e6
+
+
+single = make_forward(prog, backend="xla")
+y1, single_us = timed(lambda: single(x))
+mesh = make_mesh(({data}, {model}), ("data", "model"))
+sharded = make_forward(partition_network(prog, data={data}, model={model}),
+                       backend="xla", mesh=mesh)
+yn, sharded_us = timed(lambda: sharded(x))
+print(json.dumps({{
+    "devices": {n}, "mesh": [{data}, {model}], "batch": {batch},
+    "sparsity": {sparsity},
+    "single_device_us": single_us, "sharded_us": sharded_us,
+    "speedup": single_us / max(sharded_us, 1e-9),
+    "max_abs_diff": float(np.abs(np.asarray(yn) - np.asarray(y1)).max()),
+}}))
+"""
+
+
+def _sharded_throughput(n_devices: int = 4, batch: int = 8,
+                        sparsity: float = 0.75) -> dict:
+    """1-vs-N-device throughput of the same compiled program (subprocess
+    with virtualized host devices; data x model mesh = 2 x N/2)."""
+    data = 2 if n_devices >= 2 else 1
+    code = textwrap.dedent(_SHARDED_BODY).format(
+        n=n_devices, data=data, model=n_devices // data,
+        batch=batch, sparsity=sparsity,
+    )
+    env = dict(os.environ)
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    if out.returncode != 0:
+        return {"error": out.stderr[-2000:], "devices": n_devices}
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def _consistency_check() -> dict:
     """Engine hardware_report vs simulate_dataset on identical bits."""
     stats, layers = synthesize_network("cifar10", seed=0)
@@ -161,6 +245,7 @@ def collect(quick: bool = False) -> dict:
                 sparsities=sparsities,
             ),
         ],
+        "sharded": _sharded_throughput(n_devices=4 if quick else 8),
         "consistency": _consistency_check(),
     }
     return report
@@ -181,6 +266,15 @@ def run():
                 f";e_measured_pj={lv['energy_pj_measured']:.0f}"
                 f";e_assumed_pj={lv['energy_pj_assumed']:.0f}"
             )
+    sh = report["sharded"]
+    if "error" not in sh:
+        yield (
+            f"engine_sharded_{sh['devices']}dev,"
+            f"{sh['sharded_us']:.1f},"
+            f"single_us={sh['single_device_us']:.1f}"
+            f";speedup={sh['speedup']:.2f}"
+            f";max_diff={sh['max_abs_diff']:.1e}"
+        )
     c = report["consistency"]
     yield (
         f"engine_consistency,0.0,"

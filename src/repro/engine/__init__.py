@@ -3,8 +3,10 @@
 The paper's deployment story made real: ``lowering`` turns pruned dense
 weights into compressed spmm operands (reorder -> compress -> index),
 ``program`` is the compiled artifact (ops + geometry + crossbar pricing),
-``executor`` runs it through the Pallas/XLA kernels, ``serialize``
-persists it, ``service`` serves traffic over it, and ``stats`` measures
+``executor`` runs it through the Pallas/XLA kernels (single-device or
+sharded over a mesh via ``partition`` — tile-parallel spmm with psum
+combine, batch-parallel service slots), ``serialize`` persists it,
+``service`` serves traffic over it, and ``stats`` measures
 activation-skip statistics on the served traffic so the crossbar energy
 pricing uses observed (not assumed) skip probabilities.
 
@@ -15,6 +17,13 @@ zero-padding dead slots.
 """
 
 from repro.engine.executor import execute, extract_patches, make_forward
+from repro.engine.partition import (
+    NetworkPartition,
+    pad_bp_tiles,
+    partition_from_mesh,
+    partition_network,
+    tile_assignment,
+)
 from repro.engine.lowering import (
     EngineConfig,
     compile_network,
@@ -48,6 +57,11 @@ __all__ = [
     "load_program",
     "ClassifyRequest",
     "InferenceService",
+    "NetworkPartition",
+    "pad_bp_tiles",
+    "partition_from_mesh",
+    "partition_network",
+    "tile_assignment",
     "ActivationStats",
     "LayerSkipStats",
     "skip_patterns_and_masks",

@@ -16,6 +16,16 @@ over the very patches the spmm consumes, so they are jit-compatible and
 backend-agnostic: they ride alongside both the Pallas and the XLA spmm
 dispatch unchanged.  ``engine/stats.py`` aggregates them and
 ``CompiledNetwork.hardware_report`` prices energy/cycles from them.
+
+With ``mesh=`` the same program executes *sharded* across a device mesh
+(``engine/partition.py``): each spmm runs tile-parallel under
+``shard_map`` — every ``model``-axis device computes the output columns
+of its contiguous slab of (zero-padded) tiles, scatters them into full
+width, and a ``psum`` combines the partial outputs before the global
+inverse permutation — while batch rows and the skip counters split over
+the ``data`` axis (counters ``psum``-reduced back to the global count).
+Padding tiles multiply zeros, so sharded and unsharded execution agree to
+fp32 tolerance and the measured statistics agree exactly.
 """
 
 from __future__ import annotations
@@ -23,16 +33,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.engine.partition import pad_bp_tiles, partition_from_mesh
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.engine.stats import (
     ActivationStats,
     skip_patterns_and_masks,
     stats_from_counts,
 )
-from repro.kernels.ops import pattern_spmm
+from repro.kernels.ops import pattern_spmm, pattern_spmm_raw
 from repro.kernels.ops import _pad_to as _pad_axis_to_mult
 from repro.models.cnn import channel_norm, max_pool_2x2
+from repro.parallel.sharding import shard_block_pattern
 
 __all__ = ["extract_patches", "make_forward", "execute"]
 
@@ -84,12 +98,118 @@ def zero_selection_counts(
     return all_zero.sum(axis=0, dtype=jnp.int32)
 
 
+class _Dispatch:
+    """Single-device spmm + stat-counter dispatch (the historical path)."""
+
+    def __init__(self, backend, interpret, bm):
+        self.backend = backend
+        self.interpret = interpret
+        self.bm = bm
+
+    def prepare(self, bp):
+        """Per-layer operand prep (identity here; padding when sharded)."""
+        return bp
+
+    def spmm(self, x2d: jax.Array, bp, prepared) -> jax.Array:
+        return pattern_spmm(
+            x2d, bp, backend=self.backend, interpret=self.interpret,
+            bm=self.bm,
+        )
+
+    def counts(self, patches, c_in, kk, masks) -> jax.Array:
+        return zero_selection_counts(patches, c_in, kk, masks)
+
+
+class _ShardedDispatch(_Dispatch):
+    """Mesh execution: tile-parallel spmm (scatter + psum over the model
+    axis), batch rows and skip counters split over the data axis."""
+
+    def __init__(self, backend, interpret, bm, mesh, part):
+        super().__init__(backend, interpret, bm)
+        self.mesh = mesh
+        self.part = part
+
+    def prepare(self, bp):
+        """Pad the tile axis for the model shards and place the slabs."""
+        return shard_block_pattern(
+            pad_bp_tiles(bp, self.part.model), self.mesh,
+            model_axis=self.part.model_axis,
+        )
+
+    def _data_spec(self, m: int) -> str | None:
+        """Shard batch rows over 'data' when they divide; else replicate.
+
+        The divisibility decision is made on static shapes at trace time,
+        so partial service generations keep exact single-device numerics.
+        """
+        part = self.part
+        return (
+            part.data_axis if part.data > 1 and m % part.data == 0 else None
+        )
+
+    def spmm(self, x2d: jax.Array, bp, prepared) -> jax.Array:
+        part = self.part
+        model, maxis = part.model, part.model_axis
+        width = (prepared.n_tiles // model) * bp.tile
+        full_width = prepared.n_tiles * bp.tile
+        dspec = self._data_spec(x2d.shape[0])
+        mspec = maxis if model > 1 else None
+
+        def local(xl, w_comp, block_ids):
+            yl = pattern_spmm_raw(
+                xl, w_comp, block_ids, bp.block,
+                backend=self.backend, interpret=self.interpret, bm=self.bm,
+            )
+            # The slabs are disjoint, so a tiled all_gather would also
+            # reassemble them with less traffic; the scatter + psum form
+            # is kept because it stays correct for any tile->device
+            # assignment, not just the contiguous one.
+            yf = jnp.zeros((xl.shape[0], full_width), yl.dtype)
+            if model > 1:
+                off = jax.lax.axis_index(maxis) * width
+                yf = jax.lax.dynamic_update_slice(yf, yl, (0, off))
+                yf = jax.lax.psum(yf, maxis)
+            else:
+                yf = jax.lax.dynamic_update_slice(yf, yl, (0, 0))
+            return yf
+
+        y = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(dspec, None), P(mspec), P(mspec)),
+            out_specs=P(dspec, None),
+            check_rep=False,
+        )(x2d, prepared.w_comp, prepared.block_ids)
+        # Output Indexing Unit: global inverse permutation after the psum
+        # (padded columns sit past every inv_order entry and are dropped)
+        y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)
+        return y.astype(x2d.dtype)
+
+    def counts(self, patches, c_in, kk, masks) -> jax.Array:
+        part = self.part
+        dspec = self._data_spec(patches.shape[0])
+        if dspec is None:
+            return zero_selection_counts(patches, c_in, kk, masks)
+
+        def local(pl):
+            return jax.lax.psum(
+                zero_selection_counts(pl, c_in, kk, masks), part.data_axis
+            )
+
+        return shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(dspec, None),),
+            out_specs=P(None, None),
+            check_rep=False,
+        )(patches)
+
+
 def _run_conv(
     op: CompiledConv,
     x: jax.Array,
-    backend: str | None,
-    interpret: bool | None,
-    bm: int | None,
+    disp: _Dispatch,
+    prepared,
     stat_masks: np.ndarray | None = None,
 ) -> tuple[jax.Array, jax.Array | None]:
     b, c, h, w = x.shape
@@ -97,12 +217,11 @@ def _run_conv(
     patches = patches.reshape(b * h * w, -1)
     counts = None
     if stat_masks is not None:
-        counts = zero_selection_counts(
+        counts = disp.counts(
             patches, op.c_in, op.kernel * op.kernel, stat_masks
         )
     patches = _pad_features(patches, op.bp.k_in)
-    y = pattern_spmm(patches, op.bp, backend=backend, interpret=interpret,
-                     bm=bm)
+    y = disp.spmm(patches, op.bp, prepared)
     y = y[:, : op.c_out] + jnp.asarray(op.bias)
     y = y.reshape(b, h, w, op.c_out).transpose(0, 3, 1, 2)
     y = jax.nn.relu(channel_norm(y))
@@ -114,12 +233,11 @@ def _run_conv(
 def _run_fc(
     op: CompiledFC,
     x: jax.Array,
-    backend: str | None,
-    interpret: bool | None,
-    bm: int | None,
+    disp: _Dispatch,
+    prepared,
 ) -> jax.Array:
     xf = _pad_features(x, op.bp.k_in)
-    y = pattern_spmm(xf, op.bp, backend=backend, interpret=interpret, bm=bm)
+    y = disp.spmm(xf, op.bp, prepared)
     return y[:, : op.d_out] + jnp.asarray(op.bias)
 
 
@@ -140,6 +258,8 @@ def make_forward(
     interpret: bool | None = None,
     bm: int | None = None,
     collect_stats: bool = False,
+    mesh=None,
+    partition=None,
 ):
     """Build the jitted batched forward for ``program``.
 
@@ -148,10 +268,28 @@ def make_forward(
       interpret: force Pallas interpret mode (None: auto off-TPU).
       bm: spmm row tile; None autotunes from the batch size.
       collect_stats: also measure per-layer all-zero-selection counts.
+      mesh: a ``jax.sharding.Mesh`` to execute on.  Tiles split over the
+        mesh's model axis (psum-combined partial outputs), batch rows and
+        stat counters over the data axis; without a mesh the historical
+        single-device path runs, and the two agree to fp32 tolerance.
+      partition: explicit :class:`~repro.engine.partition.NetworkPartition`
+        (defaults to ``program.partition``, else derived from the mesh);
+        validated against the mesh's axis sizes.
 
     Returns: fn(x: [B, C, H, W]) -> logits [B, num_classes], or, with
     ``collect_stats``, fn(x) -> (logits, :class:`ActivationStats`).
     """
+    if mesh is None:
+        if partition is not None:
+            raise ValueError("partition= requires mesh=")
+        disp: _Dispatch = _Dispatch(backend, interpret, bm)
+    else:
+        part = partition_from_mesh(mesh, partition or program.partition)
+        disp = _ShardedDispatch(backend, interpret, bm, mesh, part)
+
+    prepared = {op.name: disp.prepare(op.bp) for op in program.convs}
+    prepared["fc"] = disp.prepare(program.fc.bp)
+
     stat_masks = {}
     if collect_stats:
         for op in program.convs:
@@ -164,12 +302,12 @@ def make_forward(
         counts = {}
         for op in program.convs:
             x, cnt = _run_conv(
-                op, x, backend, interpret, bm, stat_masks.get(op.name)
+                op, x, disp, prepared[op.name], stat_masks.get(op.name)
             )
             if cnt is not None:
                 counts[op.name] = cnt
         x = x.mean(axis=(2, 3))  # global average pool
-        logits = _run_fc(program.fc, x, backend, interpret, bm)
+        logits = _run_fc(program.fc, x, disp, prepared["fc"])
         return (logits, counts) if collect_stats else logits
 
     jitted = jax.jit(forward)
@@ -196,14 +334,18 @@ def execute(
     backend: str | None = None,
     interpret: bool | None = None,
     bm: int | None = None,
+    mesh=None,
+    partition=None,
 ) -> jax.Array:
     """One-shot convenience wrapper around :func:`make_forward`.
 
-    The jitted forward is cached on the program per dispatch options, so
-    repeated calls don't re-trace.
+    The jitted forward is cached on the program per dispatch options
+    (including the mesh/partition), so repeated calls don't re-trace.
     """
     cache = program.__dict__.setdefault("_forward_cache", {})
-    key = (backend, interpret, bm)
+    key = (backend, interpret, bm, mesh, partition)
     if key not in cache:
-        cache[key] = make_forward(program, backend, interpret, bm)
+        cache[key] = make_forward(
+            program, backend, interpret, bm, mesh=mesh, partition=partition
+        )
     return cache[key](x)

@@ -24,6 +24,7 @@ from repro.core.patterns import PatternDict
 from repro.core.simulator import simulate_layer_multi
 from repro.core.sparse import BlockPatternWeight, block_density
 from repro.core.synthetic import LayerSpec, SyntheticLayer
+from repro.engine.partition import NetworkPartition, tile_assignment
 from repro.models.cnn import CNNConfig
 
 __all__ = ["CompiledConv", "CompiledFC", "CompiledNetwork"]
@@ -66,13 +67,21 @@ class CompiledFC:
 
 @dataclasses.dataclass
 class CompiledNetwork:
-    """Executable artifact: ordered ops + geometry + hardware pricing."""
+    """Executable artifact: ordered ops + geometry + hardware pricing.
+
+    ``partition`` (optional) declares how the program is meant to spread
+    over a device mesh — tile-parallel ``model`` shards x batch-parallel
+    ``data`` shards (``engine/partition.py``).  The executor realizes it
+    when given a mesh; ``hardware_report`` derives its per-chip view from
+    it; ``serialize.py`` persists it.
+    """
 
     config: CNNConfig
     convs: list[CompiledConv]
     fc: CompiledFC
     block: int
     tile: int
+    partition: NetworkPartition | None = None
 
     @property
     def num_ops(self) -> int:
@@ -127,12 +136,58 @@ class CompiledNetwork:
             ))
         return layers
 
+    def _chips_view(self, layer_results, model: int, data: int) -> dict:
+        """Split per-layer crossbar area/energy/cycles over ``model``
+        tile-parallel chips (x ``data`` batch-parallel replicas).
+
+        Each chip's share of a layer is the fraction of that layer's real
+        (unpadded) spmm tiles the contiguous assignment hands it
+        (``engine/partition.tile_assignment``) — a proportional split of
+        the crossbar-model totals, so uneven tile counts show up as chip
+        imbalance rather than being averaged away.  ``cycles_parallel``
+        is the bottleneck chip; data replicas multiply area, not latency.
+        """
+        shares = np.zeros((model, len(self.convs)))
+        for li, c in enumerate(self.convs):
+            t = c.bp.n_tiles
+            asg = tile_assignment(t, model)
+            shares[:, li] = (asg < t).sum(axis=1) / t
+
+        def split(attr):
+            vals = np.array([getattr(r, attr) for r in layer_results])
+            return shares @ vals  # [model]
+
+        cb, en, cy = split("ours_crossbars"), split("ours_energy_pj"), \
+            split("ours_cycles")
+        total_cycles = float(sum(r.ours_cycles for r in layer_results))
+        cycles_parallel = float(cy.max()) if model else 0.0
+        return {
+            "n_chips": model * data,
+            "model_shards": model,
+            "data_replicas": data,
+            "per_chip": [
+                {
+                    "chip": m,
+                    "tile_share": float(shares[m].mean()),
+                    "crossbars": float(cb[m]),
+                    "energy_pj": float(en[m]),
+                    "cycles": float(cy[m]),
+                }
+                for m in range(model)
+            ],
+            "crossbars_per_chip_max": float(cb.max()),
+            "total_crossbars_all_chips": float(cb.sum()) * data,
+            "cycles_parallel": cycles_parallel,
+            "parallel_speedup": total_cycles / max(cycles_parallel, 1e-9),
+        }
+
     def hardware_report(
         self,
         config: CrossbarConfig = CrossbarConfig(),
         energy: EnergyModel = EnergyModel(),
         skip_stats=None,
         assumed_skip: float | None = None,
+        n_chips: int | None = None,
     ) -> dict:
         """Price the compiled convs on the paper's crossbar model.
 
@@ -162,6 +217,11 @@ class CompiledNetwork:
         section's ``measured_layers`` lists which layers were actually
         observed, and per-layer rows only carry ``energy_pj_measured``
         when that layer was.
+
+        ``n_chips`` adds a ``chips`` section splitting crossbar area /
+        energy / cycles over that many tile-parallel devices; with
+        ``n_chips=None`` the view is derived from ``self.partition`` when
+        the program carries one (model shards x data replicas).
         """
         syn = self._synthetic_layers()
 
@@ -261,4 +321,10 @@ class CompiledNetwork:
                 else (e_measured - e_assumed) / max(e_assumed, 1e-9)
             ),
         }
+        if n_chips is not None:
+            rep["chips"] = self._chips_view(layers, int(n_chips), 1)
+        elif self.partition is not None:
+            rep["chips"] = self._chips_view(
+                layers, self.partition.model, self.partition.data
+            )
         return rep

@@ -5,7 +5,9 @@ a fsynced ``program.json`` manifest, written into a ``.tmp`` directory and
 ``os.replace``d only when complete, so a crashed writer never leaves a
 half-written program that a loader would pick up.  The round trip is
 bit-exact: every array is stored verbatim (float payloads as fp32, index
-streams as int32/int64).
+streams as int32/int64).  A ``CompiledNetwork.partition``
+(``engine/partition.py``) rides along in the manifest, so a program
+partitioned for an N-chip mesh reloads ready to serve from one.
 """
 
 from __future__ import annotations
@@ -18,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse import BlockPatternWeight
+from repro.engine.partition import NetworkPartition
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.models.cnn import CNNConfig
 
@@ -91,6 +94,8 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
         },
         "convs": [],
     }
+    if program.partition is not None:
+        manifest["partition"] = program.partition.to_manifest()
     for c in program.convs:
         manifest["convs"].append(
             {
@@ -176,10 +181,12 @@ def load_program(directory: str) -> CompiledNetwork:
         bp=_load_bp(fce["bp"], directory),
         bias=np.load(os.path.join(directory, fce["bias"])),
     )
+    part = manifest.get("partition")
     return CompiledNetwork(
         config=cfg,
         convs=convs,
         fc=fc,
         block=manifest["block"],
         tile=manifest["tile"],
+        partition=NetworkPartition.from_manifest(part) if part else None,
     )

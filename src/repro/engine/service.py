@@ -50,13 +50,23 @@ class InferenceService:
         backend: str | None = None,
         interpret: bool | None = None,
         collect_stats: bool = False,
+        mesh=None,
+        partition=None,
     ):
+        """With ``mesh=`` every generation executes sharded
+        (``engine/partition.py``): batch slots split over the mesh's data
+        axis, each layer's tiles over the model axis.  Full generations
+        shard when ``batch_slots`` divides by the data axis; a partial
+        final generation that doesn't falls back to replicated batch rows
+        inside the same mesh forward, keeping exact numerics either way.
+        """
         self.program = program
         self.batch_slots = batch_slots
         self.collect_stats = collect_stats
+        self.mesh = mesh
         self._forward = make_forward(
             program, backend=backend, interpret=interpret,
-            collect_stats=collect_stats,
+            collect_stats=collect_stats, mesh=mesh, partition=partition,
         )
         self.batches_run = 0
         self.activation_stats: ActivationStats | None = None

@@ -22,7 +22,13 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ou_mvm import ou_mvm_pallas
 from repro.kernels.pattern_spmm import pattern_spmm_pallas
 
-__all__ = ["default_backend", "pattern_spmm", "flash_attention", "ou_mvm"]
+__all__ = [
+    "default_backend",
+    "pattern_spmm",
+    "pattern_spmm_raw",
+    "flash_attention",
+    "ou_mvm",
+]
 
 
 def default_backend() -> str:
@@ -54,6 +60,40 @@ def _pick_bm(m: int, dtype) -> int:
     return 128
 
 
+def pattern_spmm_raw(
+    xm: jax.Array,
+    w_comp: jax.Array,
+    block_ids: jax.Array,
+    block: int,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    bm: int | None = None,
+) -> jax.Array:
+    """Compressed spmm in *reordered* column order (no inverse permutation).
+
+    xm: [M, K]; returns [M, T*tile] where T = w_comp.shape[0].  This is
+    the per-shard building block of the tile-parallel executor: each
+    device runs it on its slab of tiles and the partial outputs are
+    psum-combined *before* the Output Indexing Unit un-permutes columns.
+    ``pattern_spmm`` is this plus the inverse permutation.
+    """
+    backend = backend or default_backend()
+    if backend == "pallas":
+        interp = (
+            interpret if interpret is not None else jax.default_backend() != "tpu"
+        )
+        m = xm.shape[0]
+        if bm is None:
+            bm = _pick_bm(m, xm.dtype)
+        xp = _pad_to(xm, 0, bm)
+        return pattern_spmm_pallas(
+            xp, w_comp, block_ids, block=block, bm=bm, interpret=interp
+        )[:m]
+    if backend == "xla":
+        return pattern_spmm_xla(xm, w_comp, block_ids, block)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def pattern_spmm(
     x: jax.Array,
     bp: BlockPatternWeight,
@@ -65,24 +105,12 @@ def pattern_spmm(
 
     ``bm=None`` (default) autotunes the row tile from the batch size.
     """
-    backend = backend or default_backend()
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
-    if backend == "pallas":
-        interp = (
-            interpret if interpret is not None else jax.default_backend() != "tpu"
-        )
-        m = xm.shape[0]
-        if bm is None:
-            bm = _pick_bm(m, xm.dtype)
-        xp = _pad_to(xm, 0, bm)
-        y = pattern_spmm_pallas(
-            xp, bp.w_comp, bp.block_ids, block=bp.block, bm=bm, interpret=interp
-        )[:m]
-    elif backend == "xla":
-        y = pattern_spmm_xla(xm, bp.w_comp, bp.block_ids, bp.block)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    y = pattern_spmm_raw(
+        xm, bp.w_comp, bp.block_ids, bp.block,
+        backend=backend, interpret=interpret, bm=bm,
+    )
     y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)
     return y.reshape(*lead, bp.n_out).astype(x.dtype)
 

@@ -33,9 +33,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "AxisRules",
     "DEFAULT_RULES",
+    "BP_LOGICAL_SPECS",
     "logical_to_pspec",
     "tree_pspecs",
     "tree_shardings",
+    "shard_block_pattern",
     "pad_to_multiple",
     "padded_heads",
 ]
@@ -126,6 +128,33 @@ def tree_shardings(specs, shapes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# Logical axis specs of a BlockPatternWeight's device operands: the tile
+# axis is the tensor-parallel dimension of the compressed spmm (the
+# 'tiles' rule above), everything else replicates.
+BP_LOGICAL_SPECS: dict[str, tuple[str | None, ...]] = {
+    "w_comp": ("tiles", None, None, None),
+    "block_ids": ("tiles", None),
+}
+
+
+def shard_block_pattern(bp, mesh: Mesh, model_axis: str = "model"):
+    """Tile-shard a ``BlockPatternWeight``'s device operands over ``mesh``.
+
+    Places ``w_comp`` / ``block_ids`` with a NamedSharding that splits the
+    tile axis over ``model_axis`` (replicating when the axis is absent
+    from the mesh or does not divide ``n_tiles`` — callers pad first, see
+    ``engine/partition.pad_bp_tiles``).  Host-side metadata (``nnz``,
+    permutations) is untouched.  Returns a new dataclass instance.
+    """
+    rules = AxisRules(rules=(("tiles", (model_axis,)),))
+    placed = {}
+    for field, spec in BP_LOGICAL_SPECS.items():
+        arr = getattr(bp, field)
+        pspec = logical_to_pspec(spec, tuple(arr.shape), mesh, rules)
+        placed[field] = jax.device_put(arr, NamedSharding(mesh, pspec))
+    return dataclasses.replace(bp, **placed)
 
 
 def pad_to_multiple(n: int, mult: int) -> int:

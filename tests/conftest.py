@@ -1,3 +1,9 @@
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
@@ -5,3 +11,36 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# Tests that need >1 device run in a subprocess with
+# XLA_FLAGS=--xla_force_host_platform_device_count (the main pytest
+# process stays at 1 device unless CI forces more, so every other test
+# sees the normal environment).  Shared by tests/test_distributed.py and
+# tests/test_engine_sharded.py.
+_SUBPROCESS_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import jax, json
+import numpy as np
+"""
+
+
+def run_virtual_devices(n_devices: int, body: str) -> dict:
+    """Run ``body`` under ``n_devices`` virtualized host devices; the body
+    must end by printing one JSON line, which is returned parsed."""
+    code = _SUBPROCESS_PRELUDE.format(n=n_devices) + textwrap.dedent(body)
+    env = dict(os.environ)
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    line = out.stdout.strip().splitlines()[-1]
+    return json.loads(line)

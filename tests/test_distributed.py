@@ -1,19 +1,12 @@
 """Distribution: sharding rules, shard_map MoE parity, mini dry-run.
 
-Tests that need >1 device run in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count (the main pytest process
-stays at 1 device so every other test sees the normal environment).
+Tests that need >1 device run in a subprocess via
+``conftest.run_virtual_devices`` (the main pytest process stays at 1
+device so every other test sees the normal environment).
 """
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import jax
-import numpy as np
 import pytest
+from conftest import run_virtual_devices as _run_sub
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import (
@@ -47,29 +40,6 @@ def test_padded_heads():
     assert padded_heads(32, 16) == 32
     assert padded_heads(8, 16) == 16
     assert pad_to_multiple(49155, 256) == 49408
-
-
-_SUBPROCESS_PRELUDE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
-import jax, json
-import numpy as np
-"""
-
-
-def _run_sub(n_devices: int, body: str) -> dict:
-    code = _SUBPROCESS_PRELUDE.format(n=n_devices) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src")
-    )
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        env=env, timeout=600,
-    )
-    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
-    line = out.stdout.strip().splitlines()[-1]
-    return json.loads(line)
 
 
 @pytest.mark.slow

@@ -139,6 +139,32 @@ def test_serialize_roundtrip_bit_exact(mini, tmp_path):
     )
 
 
+def test_serialize_roundtrip_partition_metadata(mini, tmp_path):
+    """A partitioned program reloads with its partition intact and still
+    produces the identical forward output (golden, bit-exact)."""
+    from repro.engine import NetworkPartition, partition_network
+
+    cfg, params, bits, prog = mini
+    progp = partition_network(prog, data=2, model=4)
+    x = jax.random.normal(jax.random.PRNGKey(21), (3, 1, 12, 12))
+    golden = np.asarray(execute(prog, x, backend="xla"))
+
+    path = save_program(str(tmp_path / "prog_part"), progp)
+    prog2 = load_program(path)
+    assert prog2.partition == NetworkPartition(data=2, model=4)
+    np.testing.assert_array_equal(
+        np.asarray(execute(prog2, x, backend="xla")), golden
+    )
+    # the chips view survives the round trip via the partition
+    rep = prog2.hardware_report()
+    assert rep["chips"]["n_chips"] == 8
+
+    # an unpartitioned program round-trips with no partition
+    prog3 = load_program(save_program(str(tmp_path / "prog_plain"), prog))
+    assert prog3.partition is None
+    assert "chips" not in prog3.hardware_report()
+
+
 def test_save_is_atomic(mini, tmp_path):
     """A second save over an existing program replaces it cleanly."""
     *_, prog = mini

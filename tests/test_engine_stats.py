@@ -157,6 +157,52 @@ def test_stats_merge_accumulates(mini):
     )
 
 
+def test_counts_over_row_shards_sum_to_global(rng):
+    """The per-device counter is additive over batch-row shards — the
+    invariant the sharded executor's psum over the data axis relies on."""
+    m, c_in, kk, shards = 64, 5, 9, 4
+    a = rng.normal(size=(m, c_in, kk)).astype(np.float32)
+    a[rng.random(size=a.shape) < 0.5] = 0.0
+    patches = a.reshape(m, c_in * kk)
+    total = np.asarray(
+        zero_selection_counts(jnp.asarray(patches), c_in, kk, MASKS)
+    )
+    per_shard = [
+        np.asarray(zero_selection_counts(jnp.asarray(chunk), c_in, kk, MASKS))
+        for chunk in np.split(patches, shards)
+    ]
+    np.testing.assert_array_equal(sum(per_shard), total)
+
+
+def test_stats_merge_over_device_shards_equals_global(rng):
+    """ActivationStats.merge over per-device shard stats == the global
+    count (windows and counters) — the host-side equivalent of the psum."""
+    m, c_in, kk, shards = 64, 3, 9, 4
+    a = rng.normal(size=(m, c_in, kk)).astype(np.float32)
+    a[rng.random(size=a.shape) < 0.5] = 0.0
+    patches = a.reshape(m, c_in * kk)
+    patterns = (0, 19, 274, 511)
+
+    def stats_of(rows: np.ndarray) -> ActivationStats:
+        counts = np.asarray(
+            zero_selection_counts(jnp.asarray(rows), c_in, kk, MASKS)
+        ).astype(np.int64)
+        return ActivationStats(layers={"conv1": LayerSkipStats(
+            name="conv1", kernel_size=kk, patterns=patterns,
+            windows=rows.shape[0], counts=counts,
+        )})
+
+    merged = stats_of(np.split(patches, shards)[0])
+    for chunk in np.split(patches, shards)[1:]:
+        merged = merged.merge(stats_of(chunk))
+    glob = stats_of(patches)
+    assert merged.layers["conv1"].windows == glob.layers["conv1"].windows == m
+    np.testing.assert_array_equal(
+        merged.layers["conv1"].counts, glob.layers["conv1"].counts
+    )
+    assert merged.mean_skip() == pytest.approx(glob.mean_skip())
+
+
 def test_service_accumulates_stats(mini):
     cfg, params, bits, prog = mini
     svc = InferenceService(prog, batch_slots=4, backend="xla",

@@ -1,0 +1,99 @@
+"""Property-based tests for the tile partitioner (engine/partition.py).
+
+Random block-sparse weights are compressed with the engine's exact
+lowering path and then tile-padded for every shard count: the assignment
+must cover each padded tile exactly once, padding tiles must be inert
+(all-zero bricks, zero nnz), and the padded operand must reconstruct the
+identical dense matrix — the invariants the sharded executor's
+scatter + psum combine relies on.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import build_block_pattern, nonzero_block_masks
+from repro.engine.partition import (
+    pad_bp_tiles,
+    padded_tiles,
+    tile_assignment,
+)
+
+BLOCK, TILE = 8, 8
+
+
+def _random_bp(seed: int, nb: int, nt: int, density: float):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(nb * BLOCK, nt * TILE)).astype(np.float32)
+    # block-structured zeros: kill whole (block, column) strips
+    kill = rng.random(size=(nb, nt * TILE)) > density
+    w *= ~np.repeat(kill, BLOCK, axis=0)
+    masks = nonzero_block_masks(w, BLOCK)
+    return w, build_block_pattern(w, block=BLOCK, tile=TILE, masks=masks)
+
+
+bp_params = st.tuples(
+    st.integers(0, 2**31 - 1),  # seed
+    st.integers(1, 3),  # K blocks
+    st.integers(1, 6),  # tiles
+    st.floats(0.1, 0.9),  # density
+    st.integers(1, 9),  # shards
+)
+
+
+@given(bp_params)
+@settings(max_examples=40, deadline=None)
+def test_assignment_covers_every_padded_tile_once(p):
+    _, nb, nt, _, shards = p
+    asg = tile_assignment(nt, shards)
+    assert asg.shape == (shards, padded_tiles(nt, shards) // shards)
+    np.testing.assert_array_equal(
+        np.sort(asg.ravel()), np.arange(asg.size)
+    )
+    # minimal padding: strictly fewer than `shards` inert tiles added
+    assert nt <= asg.size < nt + shards
+
+
+@given(bp_params)
+@settings(max_examples=25, deadline=None)
+def test_padding_tiles_are_inert(p):
+    seed, nb, nt, density, shards = p
+    _, bp = _random_bp(seed, nb, nt, density)
+    padded = pad_bp_tiles(bp, shards)
+    assert padded.n_tiles == padded_tiles(bp.n_tiles, shards)
+    # original tiles bit-identical
+    np.testing.assert_array_equal(
+        np.asarray(padded.w_comp[: bp.n_tiles]), np.asarray(bp.w_comp)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(padded.block_ids[: bp.n_tiles]),
+        np.asarray(bp.block_ids),
+    )
+    np.testing.assert_array_equal(padded.nnz[: bp.n_tiles], bp.nnz)
+    # padding tiles carry nothing
+    assert not np.asarray(padded.w_comp[bp.n_tiles:]).any()
+    assert not padded.nnz[bp.n_tiles:].any()
+
+
+@given(bp_params)
+@settings(max_examples=25, deadline=None)
+def test_reassembled_weights_equal_unsharded(p):
+    """Gathering each shard's tile slab back together reproduces the
+    padded operand, and the padded operand reconstructs the original
+    dense weight exactly."""
+    seed, nb, nt, density, shards = p
+    w, bp = _random_bp(seed, nb, nt, density)
+    padded = pad_bp_tiles(bp, shards)
+    asg = tile_assignment(bp.n_tiles, shards)
+    # per-shard slabs (what each device holds) reassemble to the operand
+    slabs = np.asarray(padded.w_comp)[asg.ravel()]
+    np.testing.assert_array_equal(slabs, np.asarray(padded.w_comp))
+    # and the compressed representation is still the same matrix
+    np.testing.assert_array_equal(
+        np.asarray(padded.dense()), np.asarray(bp.dense())
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bp.dense()).astype(np.float32), w
+    )
