@@ -8,6 +8,11 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
     uniform skip probability (ASSUMED_SKIP), and the skip probabilities
     *measured* on the bench activations by the stats-collecting forward —
     plus the measured-vs-assumed energy delta,
+  * a ``quantized`` sub-entry per level: the same pruned network compiled
+    at ``precision='int8'`` (4-bit-cell bit-sliced storage) and executed
+    through the int8-input/int32-accumulate kernel — accuracy delta
+    (max-abs logit difference and top-1 agreement vs the fp32 engine)
+    next to the crossbar-area/energy win the narrower cells buy,
   * a 1-vs-N-device sharded-execution entry: the same compiled program
     run unsharded and tile/batch-sharded over a mesh of N virtualized
     host devices (subprocess, ``--xla_force_host_platform_device_count``),
@@ -20,7 +25,15 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
     crossbar counts exactly (same pattern bits -> same ``map_layer``).
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.bench_engine [--out FILE] [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_engine \\
+      [--out FILE] [--quick] [--smoke]
+
+``--smoke`` is the CI bench-regression configuration: mini-CNN only, one
+sparsity level, a 2-device sharded entry — small enough for every PR, but
+still covering the engine-vs-dense ratio, the quantized accuracy/area
+numbers, and the simulator-consistency check that
+``benchmarks/check_baseline.py`` gates against
+``benchmarks/baselines/bench_smoke.json``.
 
 As part of ``benchmarks.run`` it contributes the usual CSV rows.
 """
@@ -28,6 +41,7 @@ As part of ``benchmarks.run`` it contributes the usual CSV rows.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import subprocess
@@ -71,6 +85,62 @@ def _pruned(cfg: CNNConfig, sparsity: float, num_patterns: int, seed: int):
     return project_params(params, dicts)
 
 
+EVAL_BATCH = 128  # agreement sample size: granularity 1/128 < gate slack
+
+
+def _quantized_entry(cfg, params, bits, x, fp32_fn, fp32_us, rep_fp32):
+    """Int8/4-bit-cell execution of the same pruned network: accuracy
+    delta vs the fp32 engine next to the area/energy the cells buy.
+
+    Timing uses the bench batch ``x``; the accuracy numbers use a larger
+    synthetic eval batch so top-1 agreement has finer granularity than
+    the baseline gate's slack (one argmax flip must not fail CI)."""
+    progq = compile_network(cfg, params, bits, precision="int8")
+    q_fn = make_forward(progq, backend="xla")
+    _, q_us = timed(lambda: jax.block_until_ready(q_fn(x)), repeats=3)
+    repq = progq.hardware_report()
+    comp_bytes, _ = progq.weight_bytes()
+    x_eval = jax.random.normal(
+        jax.random.PRNGKey(7), (EVAL_BATCH,) + x.shape[1:]
+    )
+    out_fp32, out_q = fp32_fn(x_eval), q_fn(x_eval)
+    top1 = float(
+        (jnp.argmax(out_q, -1) == jnp.argmax(out_fp32, -1)).mean()
+    )
+    return {
+        "precision": progq.precision,
+        "cell_bits": progq.cell_bits,
+        "cells_per_weight": repq["precision"]["cells_per_weight"],
+        "eval_batch": EVAL_BATCH,
+        "engine_us": q_us,
+        "vs_fp32_engine": q_us / max(fp32_us, 1e-9),
+        "max_abs_diff_vs_fp32": float(jnp.abs(out_q - out_fp32).max()),
+        "top1_agreement_vs_fp32": top1,
+        "weight_bytes": comp_bytes,
+        "crossbars": repq["crossbars"],
+        "area_efficiency": repq["area_efficiency"],
+        "energy_pj_noskip": repq["energy_pj"],
+        "area_win_vs_fp32": rep_fp32["crossbars"]
+        / max(repq["crossbars"], 1),
+        "energy_win_vs_fp32": rep_fp32["energy_pj"]
+        / max(repq["energy_pj"], 1e-9),
+        # same stored int8 numbers, repriced at other cell widths: the
+        # accuracy column is constant, the area/energy columns move
+        "cell_sweep": [
+            {
+                "cell_bits": cb,
+                "cells_per_weight": rep_cb["precision"]["cells_per_weight"],
+                "crossbars": rep_cb["crossbars"],
+                "energy_pj_noskip": rep_cb["energy_pj"],
+            }
+            for cb in (2, 4, 8)
+            for rep_cb in [
+                dataclasses.replace(progq, cell_bits=cb).hardware_report()
+            ]
+        ],
+    }
+
+
 def _bench_network(name: str, cfg: CNNConfig, batch: int,
                    sparsities=SPARSITIES) -> dict:
     x = jax.random.normal(
@@ -112,6 +182,9 @@ def _bench_network(name: str, cfg: CNNConfig, batch: int,
                 "measured_vs_assumed_delta_pj":
                     rep["skip"]["measured_vs_assumed_delta_pj"],
                 "measured_mean_skip": stats.mean_skip(),
+                "quantized": _quantized_entry(
+                    cfg, params, bits, x, eng_fn, eng_us, rep
+                ),
                 "hardware_report": {
                     k: v for k, v in rep.items() if k != "layers"
                 },
@@ -227,25 +300,31 @@ def _consistency_check() -> dict:
     }
 
 
-def collect(quick: bool = False) -> dict:
-    sparsities = SPARSITIES[1:2] if quick else SPARSITIES
-    report = {
-        "networks": [
-            _bench_network(
-                "mini_cnn",
-                mini_cnn_config(num_classes=4, input_hw=12,
-                                widths=(8, 16, 16)),
-                batch=8,
-                sparsities=sparsities,
-            ),
+def collect(quick: bool = False, smoke: bool = False) -> dict:
+    sparsities = SPARSITIES[1:2] if (quick or smoke) else SPARSITIES
+    networks = [
+        _bench_network(
+            "mini_cnn",
+            mini_cnn_config(num_classes=4, input_hw=12,
+                            widths=(8, 16, 16)),
+            batch=8,
+            sparsities=sparsities,
+        ),
+    ]
+    if not smoke:
+        networks.append(
             _bench_network(
                 "vgg16_cifar",
                 vgg16_config(num_classes=10, input_hw=32),
                 batch=2,
                 sparsities=sparsities,
-            ),
-        ],
-        "sharded": _sharded_throughput(n_devices=4 if quick else 8),
+            )
+        )
+    report = {
+        "networks": networks,
+        "sharded": _sharded_throughput(
+            n_devices=2 if smoke else (4 if quick else 8)
+        ),
         "consistency": _consistency_check(),
     }
     return report
@@ -257,6 +336,7 @@ def run():
     for net in report["networks"]:
         for lv in net["levels"]:
             hw = lv["hardware_report"]
+            q = lv["quantized"]
             yield (
                 f"engine_{net['network']}_s{lv['sparsity']:.2f},"
                 f"{lv['engine_us']:.1f},"
@@ -265,6 +345,15 @@ def run():
                 f";area_eff={hw['area_efficiency']:.2f}"
                 f";e_measured_pj={lv['energy_pj_measured']:.0f}"
                 f";e_assumed_pj={lv['energy_pj_assumed']:.0f}"
+            )
+            yield (
+                f"engine_{net['network']}_s{lv['sparsity']:.2f}_int8,"
+                f"{q['engine_us']:.1f},"
+                f"top1_agree={q['top1_agreement_vs_fp32']:.3f}"
+                f";max_diff={q['max_abs_diff_vs_fp32']:.1e}"
+                f";crossbars={q['crossbars']}"
+                f";area_win={q['area_win_vs_fp32']:.2f}"
+                f";energy_win={q['energy_win_vs_fp32']:.2f}"
             )
     sh = report["sharded"]
     if "error" not in sh:
@@ -289,8 +378,11 @@ def main():
     ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
     ap.add_argument("--quick", action="store_true",
                     help="single sparsity level")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-regression config: mini-CNN only, one "
+                         "sparsity, 2-device sharded entry")
     args = ap.parse_args()
-    report = collect(quick=args.quick)
+    report = collect(quick=args.quick, smoke=args.smoke)
     payload = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,178 @@
+"""Gate a ``bench_engine`` JSON report against a committed baseline.
+
+CI runs ``python -m benchmarks.bench_engine --smoke --out bench_smoke.json``
+on every PR and then::
+
+  python benchmarks/check_baseline.py bench_smoke.json \\
+      benchmarks/baselines/bench_smoke.json
+
+Two classes of checks, because CI runners make wall-clock noisy but the
+hardware model is deterministic:
+
+* **exact/deterministic** — simulator consistency must hold; crossbar,
+  area-efficiency and energy numbers must match the baseline to a tight
+  relative tolerance (they depend only on seeds and the pricing code, so
+  any drift is a real behaviour change); the engine-vs-dense output
+  difference must stay within the fp32 bound; and the quantized top-1
+  agreement may not fall below the baseline by more than ``--top1-slack``.
+* **throughput** — the engine-vs-dense wall-clock ratio (a *ratio*, so
+  machine speed cancels) may not regress beyond ``--time-tol`` times the
+  baseline ratio.
+
+Exit code 0 when everything holds; 1 with a per-check report otherwise.
+Regenerate the baseline with the same ``--smoke`` run when an intentional
+change shifts the deterministic numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# CI runners are noisy; a throughput regression has to be gross to fail.
+DEFAULT_TIME_TOL = 3.0
+# deterministic hardware-model numbers: effectively equality
+DETERMINISTIC_RTOL = 1e-6
+# top-1 agreement may wiggle by a boundary flip or two across platforms
+DEFAULT_TOP1_SLACK = 0.02
+MAX_ABS_DIFF_CEIL = 1e-2  # engine vs dense fp32 logits
+
+DETERMINISTIC_HW_FIELDS = (
+    "crossbars",
+    "naive_crossbars",
+    "area_efficiency",
+    "energy_pj",
+    "index_kb",
+)
+DETERMINISTIC_QUANT_FIELDS = (
+    "crossbars",
+    "cells_per_weight",
+    "weight_bytes",
+    "area_win_vs_fp32",
+    "energy_win_vs_fp32",
+)
+
+
+def _levels(report: dict) -> dict:
+    out = {}
+    for net in report.get("networks", []):
+        for lv in net.get("levels", []):
+            out[(net["network"], round(lv["sparsity"], 4))] = lv
+    return out
+
+
+class Checker:
+    def __init__(self):
+        self.failures: list[str] = []
+        self.passed = 0
+
+    def check(self, ok: bool, msg: str):
+        if ok:
+            self.passed += 1
+        else:
+            self.failures.append(msg)
+
+    def close(self, cur: float, base: float, what: str):
+        ok = abs(cur - base) <= DETERMINISTIC_RTOL * max(abs(base), 1e-12)
+        self.check(ok, f"{what}: {cur!r} != baseline {base!r}")
+
+
+def _check_level(c: Checker, tag, lv, blv, time_tol, top1_slack):
+    hw, bhw = lv["hardware_report"], blv["hardware_report"]
+
+    # throughput: ratio-vs-ratio, generous tolerance
+    ratio, base_ratio = lv["engine_vs_dense"], blv["engine_vs_dense"]
+    msg = (
+        f"{tag}: engine-vs-dense throughput regressed "
+        f"{ratio:.2f} > {time_tol} x baseline {base_ratio:.2f}"
+    )
+    c.check(ratio <= base_ratio * time_tol, msg)
+
+    # numerics: engine must stay near the dense reference
+    msg = (
+        f"{tag}: engine-vs-dense max_abs_diff {lv['max_abs_diff']:.2e} "
+        f"exceeds {MAX_ABS_DIFF_CEIL:.0e}"
+    )
+    c.check(lv["max_abs_diff"] <= MAX_ABS_DIFF_CEIL, msg)
+
+    # deterministic hardware-model numbers
+    for field in DETERMINISTIC_HW_FIELDS:
+        c.close(hw[field], bhw[field], f"{tag}: {field}")
+    c.close(lv["weight_bytes"], blv["weight_bytes"], f"{tag}: weight_bytes")
+
+    q, bq = lv.get("quantized"), blv.get("quantized")
+    c.check(q is not None, f"{tag}: quantized entry missing")
+    if q and bq:
+        agree, base_agree = (
+            q["top1_agreement_vs_fp32"],
+            bq["top1_agreement_vs_fp32"],
+        )
+        msg = (
+            f"{tag}: quantized top-1 agreement {agree:.3f} fell more "
+            f"than {top1_slack} below baseline {base_agree:.3f}"
+        )
+        c.check(agree >= base_agree - top1_slack, msg)
+        for field in DETERMINISTIC_QUANT_FIELDS:
+            c.close(q[field], bq[field], f"{tag}: quantized {field}")
+
+
+def compare(current, baseline, time_tol, top1_slack) -> Checker:
+    c = Checker()
+
+    cons = current.get("consistency", {})
+    msg = f"simulator consistency broken: {cons}"
+    c.check(cons.get("per_layer_match") is True, msg)
+
+    cur_levels, base_levels = _levels(current), _levels(baseline)
+    missing = sorted(set(base_levels) - set(cur_levels))
+    c.check(not missing, f"missing bench levels: {missing}")
+
+    for key in sorted(set(base_levels) & set(cur_levels)):
+        tag = f"{key[0]} s={key[1]}"
+        _check_level(c, tag, cur_levels[key], base_levels[key], time_tol, top1_slack)
+
+    sh = current.get("sharded", {})
+    msg = f"sharded entry errored: {str(sh.get('error', ''))[:500]}"
+    c.check("error" not in sh, msg)
+    if "max_abs_diff" in sh:
+        msg = (
+            f"sharded max_abs_diff {sh['max_abs_diff']:.2e} "
+            f"exceeds {MAX_ABS_DIFF_CEIL:.0e}"
+        )
+        c.check(sh["max_abs_diff"] <= MAX_ABS_DIFF_CEIL, msg)
+    return c
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh bench_engine JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--time-tol",
+        type=float,
+        default=DEFAULT_TIME_TOL,
+        help="allowed engine-vs-dense ratio blow-up",
+    )
+    ap.add_argument(
+        "--top1-slack",
+        type=float,
+        default=DEFAULT_TOP1_SLACK,
+        help="allowed quantized top-1 agreement drop",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    c = compare(current, baseline, args.time_tol, args.top1_slack)
+    print(f"{c.passed} checks passed, {len(c.failures)} failed")
+    for msg in c.failures:
+        print(f"FAIL: {msg}")
+    return 1 if c.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,8 @@
 simulate -> compile -> serve (the paper's full flowchart, Fig 3, CPU-sized,
 plus the deployment path).
 
-  PYTHONPATH=src python examples/pattern_prune_cnn.py
+  PYTHONPATH=src python examples/pattern_prune_cnn.py \\
+      [--precision {int8,fp32}] [--cell-bits N]
 
 Steps:
   1. train a small CNN on a synthetic 4-class task to ~100% accuracy,
@@ -11,9 +12,25 @@ Steps:
   3. map the pruned kernels with the kernel-reordering scheme,
   4. report the paper's three metrics on this network,
   5. compile the pruned network into an executable crossbar program and
-     serve a batch of requests through the engine's classification service.
+     serve a batch of requests through the engine's classification service,
+  6.-7. measured-vs-assumed energy pricing, sharded execution over a mesh,
+  8. cell precision: recompile the same pruned network quantized.
+
+Cell precision (step 8): the paper stores weights bit-sliced over 4-bit
+RRAM cells; ``--precision int8`` compiles the pruned network a second
+time with per-OU-row-group symmetric int8 weights that occupy
+``ceil(8 / cell_bits)`` cells each (2 at the default ``--cell-bits 4``)
+and *executes* them through the int8-input/int32-accumulate kernels.
+That is the accuracy/area trade-off knob made measurable: the narrower
+cells cut crossbar area and ADC energy (printed as the area/energy win
+vs the fp32 compile), at the cost of a bounded quantization error —
+printed as the max-abs logit delta and top-1 agreement vs the fp32
+engine on a synthetic eval batch.  ``--precision fp32`` skips step 8;
+``--cell-bits`` varies the priced cell width without touching the stored
+int8 numbers (e.g. 2-bit cells -> 4 slices -> more area, same accuracy).
 """
 
+import argparse
 import tempfile
 import time
 
@@ -39,6 +56,22 @@ from repro.models.cnn import (
     mini_cnn_config,
 )
 from repro.optim import adamw
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--precision", choices=["int8", "fp32"], default="int8",
+                help="stored cell precision for the step-8 quantized "
+                     "compile (fp32 skips it)")
+ap.add_argument("--cell-bits", type=int, default=4,
+                help="RRAM cell width the int8 weights are sliced over "
+                     "for hardware pricing")
+args = ap.parse_args()
+# build the quantized-compile config up front so bad flags fail in
+# milliseconds, not after the training/pruning pipeline has run
+if args.precision != "fp32":
+    from repro.engine import EngineConfig
+
+    quant_ecfg = EngineConfig(precision=args.precision,
+                              cell_bits=args.cell_bits)
 
 t0 = time.time()
 cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
@@ -184,6 +217,43 @@ print(f"  per-chip split ({chips['model_shards']} tile-parallel chip(s)): "
       f"max {chips['crossbars_per_chip_max']:.1f} crossbars/chip, "
       f"bottleneck {chips['cycles_parallel']:.0f} cycles "
       f"({chips['parallel_speedup']:.2f}x vs single chip)")
+
+# -- 8. cell precision: int-quantized 4-bit-cell execution --------------------
+# The same pruned network, stored the way the crossbars would hold it:
+# per-row-group symmetric int8 bricks sliced over args.cell_bits-wide
+# cells, executed through the int8-input/int32-accumulate kernels.  The
+# hardware report now prices the cells actually stored, so the area and
+# ADC-energy win of the narrower cells appears next to the accuracy cost.
+if args.precision != "fp32":
+    program_q = compile_network(
+        cfg, res.params, res.pattern_bits, ecfg=quant_ecfg
+    )
+    x_eval, y_eval = gen_batch(jax.random.PRNGKey(321), 256)
+    logits_fp = make_forward(program)(x_eval)
+    logits_q = make_forward(program_q)(x_eval)
+    top1_agree = float(
+        (jnp.argmax(logits_q, -1) == jnp.argmax(logits_fp, -1)).mean()
+    )
+    acc_q = float((np.asarray(jnp.argmax(logits_q, -1)) ==
+                   np.asarray(y_eval)).mean())
+    rep_q = program_q.hardware_report()
+    prec = rep_q["precision"]
+    cb_fp, _ = program.weight_bytes()
+    cb_q, _ = program_q.weight_bytes()
+    print(f"[{time.time()-t0:5.1f}s] cell precision "
+          f"({prec['weights']}, {prec['cell_bits']}-bit cells, "
+          f"{prec['cells_per_weight']} cells/weight):")
+    print(f"  accuracy: max |int8 - fp32| = "
+          f"{float(jnp.abs(logits_q - logits_fp).max()):.2e}, "
+          f"top-1 agreement {top1_agree:.1%} "
+          f"(served accuracy {acc_q:.3f})")
+    print(f"  area:     {rep_q['crossbars']} crossbars vs "
+          f"{rep['crossbars']} fp32-priced "
+          f"({rep['crossbars']/max(rep_q['crossbars'],1):.2f}x win), "
+          f"weights {cb_q/1024:.1f} KiB vs {cb_fp/1024:.1f} KiB")
+    print(f"  energy:   {rep_q['energy_pj']/1e3:.1f} nJ/img vs "
+          f"{rep['energy_pj']/1e3:.1f} nJ/img no-skip "
+          f"({rep['energy_pj']/max(rep_q['energy_pj'],1e-9):.2f}x win)")
 
 print("(full-scale VGG16 numbers: PYTHONPATH=src python -m benchmarks.run"
       " --only paper; engine bench: python -m benchmarks.bench_engine)")

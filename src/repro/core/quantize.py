@@ -1,0 +1,182 @@
+"""Int quantization of compressed weights onto the paper's 4-bit RRAM cells.
+
+The crossbar model (``core/mapping.CrossbarConfig``) always priced weights
+as bit-sliced low-precision cells — 16-bit weights over four 4-bit cells —
+while the engine executed fp32 ``w_comp``.  This module closes that gap:
+weights are stored as **per-OU-row-group symmetric int8** and the
+executor really runs them (``kernels/ops.pattern_spmm`` int8-input /
+int32-accumulate variant), so ``hardware_report`` prices the cell model
+the hardware would actually hold.
+
+Granularity: in the compressed spmm layout a *row-group* is one stored
+``[block, tile]`` brick — the rows of one K-block feeding one output tile,
+exactly the row span the OU walks.  Each brick gets one fp32 scale
+(``w_scales[t, k] = max|brick| / 127``), so
+
+    w  ≈  w_scales[t, k] * q[t, k]      with  |w - s*q| <= s/2
+
+elementwise (round-to-nearest), the bound the hypothesis property in
+``tests/test_quantize.py`` checks.
+
+Cell decomposition: an int8 weight is sign + 7 magnitude bits, stored
+sign-magnitude across ``ceil(weight_bits / cell_bits)`` adjacent cells
+(2 slices for 8-bit weights on 4-bit cells; the sign rides in the top
+slice's spare bit, same as the paper's 16-bit / four-cell slicing).
+``cell_slices`` / ``compose_cell_slices`` are the lossless round trip;
+``n_cell_slices`` is what ``CompiledNetwork.hardware_report`` substitutes
+for the assumed ``cells_per_weight``.
+
+Activations are quantized dynamically per row (one scale per im2col
+window) right before the spmm; the dequant ``y = x_scale * sum_k
+w_scale_k * (qx_k @ qw_k)`` folds the row scale into the output epilogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BlockPatternWeight
+
+__all__ = [
+    "WEIGHT_BITS",
+    "QMAX",
+    "n_cell_slices",
+    "group_scales",
+    "quantize_groups",
+    "dequantize_groups",
+    "quantize_bp",
+    "dequantize_bp",
+    "quantize_rows",
+    "cell_slices",
+    "compose_cell_slices",
+]
+
+WEIGHT_BITS = 8  # stored weight precision (symmetric int8)
+QMAX = 2 ** (WEIGHT_BITS - 1) - 1  # 127
+
+
+def n_cell_slices(cell_bits: int = 4, weight_bits: int = WEIGHT_BITS) -> int:
+    """Cells per stored weight: ``ceil(weight_bits / cell_bits)``.
+
+    Mirrors the paper's accounting (16-bit weights / 4-bit cells = 4
+    adjacent cells); int8 weights on 4-bit cells take 2.
+    """
+    if cell_bits < 1:
+        raise ValueError(f"cell_bits must be >= 1, got {cell_bits}")
+    return -(-weight_bits // cell_bits)
+
+
+def group_scales(w: np.ndarray, group_ndim: int = 2) -> np.ndarray:
+    """Symmetric scale per group: ``max|group| / QMAX``.
+
+    The trailing ``group_ndim`` axes form one group; the returned array
+    has those axes reduced away.  All-zero groups get scale 0.0 (their
+    quantized weights are 0 and dequantize exactly).
+    """
+    w = np.asarray(w, np.float32)
+    axes = tuple(range(w.ndim - group_ndim, w.ndim))
+    return (np.abs(w).max(axis=axes) / QMAX).astype(np.float32)
+
+
+def quantize_groups(
+    w: np.ndarray, scales: np.ndarray, group_ndim: int = 2
+) -> np.ndarray:
+    """Round-to-nearest symmetric int8 of ``w`` under per-group ``scales``."""
+    w = np.asarray(w, np.float32)
+    s = np.asarray(scales, np.float32).reshape(scales.shape + (1,) * group_ndim)
+    inv = np.where(s > 0, 1.0 / np.where(s > 0, s, 1.0), 0.0)
+    q = np.rint(w * inv)
+    return np.clip(q, -QMAX, QMAX).astype(np.int8)
+
+
+def dequantize_groups(
+    q: np.ndarray, scales: np.ndarray, group_ndim: int = 2
+) -> np.ndarray:
+    s = np.asarray(scales, np.float32).reshape(scales.shape + (1,) * group_ndim)
+    return (np.asarray(q, np.float32) * s).astype(np.float32)
+
+
+def quantize_bp(bp: BlockPatternWeight) -> BlockPatternWeight:
+    """Quantize a compressed weight to int8 bricks + per-brick scales.
+
+    Returns a new :class:`BlockPatternWeight` whose ``w_comp`` is int8
+    ``[T, k_max, block, tile]`` and whose ``w_scales`` is fp32
+    ``[T, k_max]`` — one scale per stored row-group brick.  Padded brick
+    slots are all-zero, so their scale is 0 and they stay numerically
+    inert under every execution path (XLA scan, Pallas, sharded).
+    """
+    if bp.w_scales is not None:
+        return bp
+    wc = np.asarray(bp.w_comp, np.float32)
+    scales = group_scales(wc, group_ndim=2)  # [T, k_max]
+    q = quantize_groups(wc, scales, group_ndim=2)
+    return dataclasses.replace(bp, w_comp=jnp.asarray(q), w_scales=jnp.asarray(scales))
+
+
+def dequantize_bp(bp: BlockPatternWeight) -> BlockPatternWeight:
+    """Inverse of :func:`quantize_bp` (up to the quantization error)."""
+    if bp.w_scales is None:
+        return bp
+    wc = dequantize_groups(
+        np.asarray(bp.w_comp), np.asarray(bp.w_scales), group_ndim=2
+    )
+    return dataclasses.replace(bp, w_comp=jnp.asarray(wc), w_scales=None)
+
+
+def quantize_rows(x):
+    """Dynamic per-row symmetric int8 of activations (jit-compatible).
+
+    x: [M, K] fp; returns (q int8 [M, K], scales fp32 [M]).  One scale
+    per row — per im2col window — so the dequant is a single per-row
+    multiply in the spmm output epilogue.  All-zero rows get scale 0 and
+    quantize to exact zeros.
+    """
+    amax = jnp.abs(x).max(axis=-1)
+    scale = (amax / QMAX).astype(jnp.float32)
+    inv = jnp.where(amax > 0, QMAX / jnp.where(amax > 0, amax, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x * inv[:, None]), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def cell_slices(q: np.ndarray, cell_bits: int = 4) -> np.ndarray:
+    """Decompose int8 weights into unsigned cell slices, sign-magnitude.
+
+    q: int8 array; returns uint8 ``[..., n_cell_slices]``: little-endian
+    ``cell_bits``-bit magnitude digits, with the sign bit stored in the
+    top slice's most significant spare bit.  Lossless for |q| <= QMAX
+    (which :func:`quantize_groups` guarantees).
+    """
+    q = np.asarray(q)
+    if q.dtype != np.int8:
+        raise ValueError(f"expected int8 weights, got {q.dtype}")
+    n = n_cell_slices(cell_bits)
+    mag = np.abs(q.astype(np.int16)).astype(np.uint16)
+    out = np.empty(q.shape + (n,), np.uint8)
+    for i in range(n):
+        out[..., i] = (mag >> (i * cell_bits)) & ((1 << cell_bits) - 1)
+    # sign in the top slice's spare bit (magnitude uses weight_bits-1 bits)
+    sign_bit = (WEIGHT_BITS - 1) - (n - 1) * cell_bits
+    out[..., n - 1] |= ((q < 0).astype(np.uint8)) << sign_bit
+    return out
+
+
+def compose_cell_slices(slices: np.ndarray, cell_bits: int = 4) -> np.ndarray:
+    """Inverse of :func:`cell_slices`: slices -> int8 weights."""
+    slices = np.asarray(slices, np.uint16)
+    n = n_cell_slices(cell_bits)
+    if slices.shape[-1] != n:
+        raise ValueError(
+            f"expected {n} slices of {cell_bits} bits, got {slices.shape[-1]}"
+        )
+    sign_bit = (WEIGHT_BITS - 1) - (n - 1) * cell_bits
+    top = slices[..., n - 1]
+    neg = (top >> sign_bit) & 1
+    top = top & ((1 << sign_bit) - 1)
+    mag = np.zeros(slices.shape[:-1], np.int16)
+    for i in range(n - 1):
+        mag |= slices[..., i].astype(np.int16) << (i * cell_bits)
+    mag |= top.astype(np.int16) << ((n - 1) * cell_bits)
+    return np.where(neg == 1, -mag, mag).astype(np.int8)

@@ -36,6 +36,7 @@ __all__ = [
     "build_block_pattern",
     "nonzero_block_masks",
     "pattern_spmm_xla",
+    "pattern_spmm_xla_quant",
     "block_density",
 ]
 
@@ -46,6 +47,7 @@ class BlockPatternWeight:
 
     Attributes:
       w_comp:     [n_tiles, k_max, block, tile] — dense bricks, zero padded.
+                  fp32, or int8 when quantized (``core/quantize.py``).
       block_ids:  [n_tiles, k_max] int32 — which K-block each brick is;
                   padded entries point at block 0 with zero weights.
       nnz:        [n_tiles] int32 — valid bricks per tile.
@@ -53,6 +55,8 @@ class BlockPatternWeight:
       inv_order:  [N] int32 — inverse permutation (original -> new).
       k_in, n_out, block, tile: geometry.
       dict_masks: [P, n_blocks] bool — the layer's pattern dictionary.
+      w_scales:   [n_tiles, k_max] fp32 per-row-group dequant scales, or
+                  None for fp32 weights.  ``w ≈ w_scales[t, k] * w_comp``.
     """
 
     w_comp: jax.Array
@@ -65,6 +69,7 @@ class BlockPatternWeight:
     block: int
     tile: int
     dict_masks: np.ndarray
+    w_scales: jax.Array | None = None
 
     @property
     def n_tiles(self) -> int:
@@ -74,11 +79,22 @@ class BlockPatternWeight:
     def k_max(self) -> int:
         return self.w_comp.shape[1]
 
+    @property
+    def precision(self) -> str:
+        """Stored weight precision: 'fp32', or 'int8' when quantized."""
+        return "int8" if self.w_scales is not None else "fp32"
+
     def dense(self) -> jax.Array:
-        """Reconstruct the dense [K, N] weight (testing oracle)."""
+        """Reconstruct the dense [K, N] weight (testing oracle).
+
+        Quantized weights dequantize through their row-group scales, so
+        the result approximates the original to the quantization bound.
+        """
         nb = self.k_in // self.block
         w = np.zeros((nb, self.block, self.n_out), np.float64)
         wc = np.asarray(self.w_comp, np.float64)
+        if self.w_scales is not None:
+            wc = wc * np.asarray(self.w_scales, np.float64)[:, :, None, None]
         ids = np.asarray(self.block_ids)
         for t in range(self.n_tiles):
             for k in range(int(self.nnz[t])):
@@ -258,3 +274,46 @@ def pattern_spmm_xla(
     if unpermute is not None:
         y = jnp.take(y, unpermute, axis=1)
     return y.reshape(*lead, t * tile).astype(out_dtype)
+
+
+def pattern_spmm_xla_quant(
+    xq: jax.Array,
+    x_scale: jax.Array,
+    w_comp: jax.Array,
+    block_ids: jax.Array,
+    w_scales: jax.Array,
+    block: int,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """XLA execution of the *int-quantized* compressed matmul.
+
+    xq: int8 [M, K] (per-row quantized activations, scales ``x_scale``
+    [M]); w_comp: int8 [T, k_max, block, tile] with per-brick row-group
+    scales ``w_scales`` [T, k_max].  Each scan step is an int8 x int8 ->
+    int32 contraction (the MXU-native path on TPU); the brick's row-group
+    scale folds into the fp32 accumulator, and the activation row scale
+    multiplies once in the output epilogue:
+
+        y = x_scale[:, None] * sum_k w_scales[t, k] * (xq_k @ wq_{t,k})
+    """
+    m, k_in = xq.shape
+    xb = xq.reshape(m, k_in // block, block)
+    t, k_max, _, tile = w_comp.shape
+
+    def step(acc, slot):
+        ids, w_slot, s_slot = slot  # [T], [T, block, tile], [T]
+        xg = jnp.take(xb, ids, axis=1)  # [M, T, block] int8
+        part = jnp.einsum(
+            "mtb,tbn->mtn", xg, w_slot, preferred_element_type=jnp.int32
+        )
+        acc = acc + s_slot[None, :, None] * part.astype(jnp.float32)
+        return acc, None
+
+    acc0 = jnp.zeros((m, t, tile), jnp.float32)
+    acc, _ = jax.lax.scan(
+        step,
+        acc0,
+        (block_ids.T, jnp.swapaxes(w_comp, 0, 1), w_scales.T),
+    )
+    y = acc * x_scale[:, None, None]
+    return y.reshape(m, t * tile).astype(out_dtype)

@@ -25,6 +25,7 @@ from repro.engine.partition import (
     tile_assignment,
 )
 from repro.engine.lowering import (
+    PRECISIONS,
     EngineConfig,
     compile_network,
     lower_conv,
@@ -42,6 +43,7 @@ from repro.engine.stats import (
 )
 
 __all__ = [
+    "PRECISIONS",
     "EngineConfig",
     "compile_network",
     "lower_conv",

@@ -17,6 +17,16 @@ backend-agnostic: they ride alongside both the Pallas and the XLA spmm
 dispatch unchanged.  ``engine/stats.py`` aggregates them and
 ``CompiledNetwork.hardware_report`` prices energy/cycles from them.
 
+Quantized programs (``precision='int8'`` at compile time) run through the
+same dispatch unchanged: ``pattern_spmm`` sees the int8 bricks +
+row-group scales on the ``BlockPatternWeight`` and switches to the
+int8-input/int32-accumulate kernel variant, quantizing activations
+per im2col row on the fly (``core/quantize.quantize_rows``).  One caveat:
+sharded-vs-unsharded agreement for quantized programs is bounded by the
+*quantization* error, not fp32 noise — an ulp-level reassociation
+difference in one layer can flip an int8 rounding in the next layer's
+dynamic activation quantization.
+
 With ``mesh=`` the same program executes *sharded* across a device mesh
 (``engine/partition.py``): each spmm runs tile-parallel under
 ``shard_map`` — every ``model``-axis device computes the output columns
@@ -154,11 +164,18 @@ class _ShardedDispatch(_Dispatch):
         full_width = prepared.n_tiles * bp.tile
         dspec = self._data_spec(x2d.shape[0])
         mspec = maxis if model > 1 else None
+        quantized = prepared.w_scales is not None
 
-        def local(xl, w_comp, block_ids):
+        def local(xl, w_comp, block_ids, *scales):
+            # Quantized operands ride the same slab split: each device
+            # holds its tiles' int8 bricks + row-group scales and
+            # quantizes its (replicated-along-model) activation rows
+            # identically, so the psum still combines disjoint column
+            # slabs of already-dequantized fp32 partials.
             yl = pattern_spmm_raw(
                 xl, w_comp, block_ids, bp.block,
                 backend=self.backend, interpret=self.interpret, bm=self.bm,
+                w_scales=scales[0] if quantized else None,
             )
             # The slabs are disjoint, so a tiled all_gather would also
             # reassemble them with less traffic; the scatter + psum form
@@ -173,13 +190,18 @@ class _ShardedDispatch(_Dispatch):
                 yf = jax.lax.dynamic_update_slice(yf, yl, (0, 0))
             return yf
 
+        args = (x2d, prepared.w_comp, prepared.block_ids)
+        in_specs = (P(dspec, None), P(mspec), P(mspec))
+        if quantized:
+            args += (prepared.w_scales,)
+            in_specs += (P(mspec),)
         y = shard_map(
             local,
             mesh=self.mesh,
-            in_specs=(P(dspec, None), P(mspec), P(mspec)),
+            in_specs=in_specs,
             out_specs=P(dspec, None),
             check_rep=False,
-        )(x2d, prepared.w_comp, prepared.block_ids)
+        )(*args)
         # Output Indexing Unit: global inverse permutation after the psum
         # (padded columns sit past every inv_order entry and are dropped)
         y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)

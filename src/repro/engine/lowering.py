@@ -22,6 +22,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.patterns import kernel_masks, masks_to_bits
+from repro.core.quantize import quantize_bp
 from repro.core.sparse import (
     BlockPatternWeight,
     build_block_pattern,
@@ -30,8 +31,10 @@ from repro.core.sparse import (
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.models.cnn import CNNConfig
 
-__all__ = ["EngineConfig", "lower_matrix", "lower_conv", "lower_fc",
-           "compile_network"]
+__all__ = ["EngineConfig", "PRECISIONS", "lower_matrix", "lower_conv",
+           "lower_fc", "compile_network"]
+
+PRECISIONS = ("fp32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,10 +44,29 @@ class EngineConfig:
     Defaults match the Pallas kernel's MXU-aligned bricks; smaller values
     trade alignment for finer-grained zero compression (useful on the XLA
     CPU path where kernel-granular blocks expose the pruning sparsity).
+
+    ``precision`` selects the stored weight representation: 'fp32' (the
+    historical exact path) or 'int8' — per-row-group symmetric int8
+    bricks + fp32 scales (``core/quantize.py``), the paper's bit-sliced
+    cell storage made executable.  ``cell_bits`` is the RRAM cell width
+    the int payload is sliced over for hardware pricing (4-bit cells by
+    default, matching ``CrossbarConfig``); it does not change the stored
+    numbers, only how ``hardware_report`` derives cells-per-weight.
     """
 
     block: int = 128
     tile: int = 128
+    precision: str = "fp32"
+    cell_bits: int = 4
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}"
+            )
+        if self.cell_bits < 1:
+            raise ValueError(f"cell_bits must be >= 1, got {self.cell_bits}")
 
 
 def _pad_axis(a: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -68,13 +90,21 @@ def conv_matrix(w: np.ndarray) -> np.ndarray:
 
 
 def lower_matrix(
-    wm: np.ndarray, block: int, tile: int
+    wm: np.ndarray, block: int, tile: int, precision: str = "fp32"
 ) -> BlockPatternWeight:
     """Pad a dense [K, N] matrix to (block, tile) multiples and compress it
-    losslessly from its nonzero structure."""
+    losslessly from its nonzero structure; ``precision='int8'`` then
+    quantizes the compressed bricks (``core/quantize.quantize_bp``)."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}"
+        )
     wp = _pad_axis(_pad_axis(np.asarray(wm, np.float32), 0, block), 1, tile)
     masks = nonzero_block_masks(wp, block)
-    return build_block_pattern(wp, block=block, tile=tile, masks=masks)
+    bp = build_block_pattern(wp, block=block, tile=tile, masks=masks)
+    if precision == "int8":
+        bp = quantize_bp(bp)
+    return bp
 
 
 def lower_conv(
@@ -99,7 +129,8 @@ def lower_conv(
         kernel=kh,
         out_hw=out_hw,
         pool_after=pool_after,
-        bp=lower_matrix(conv_matrix(w), ecfg.block, ecfg.tile),
+        bp=lower_matrix(conv_matrix(w), ecfg.block, ecfg.tile,
+                        ecfg.precision),
         bias=np.asarray(b, np.float32).copy(),
         pattern_bits=np.asarray(pattern_bits, np.int64).copy(),
     )
@@ -111,7 +142,7 @@ def lower_fc(w: np.ndarray, b: np.ndarray, ecfg: EngineConfig) -> CompiledFC:
     return CompiledFC(
         d_in=d_in,
         d_out=d_out,
-        bp=lower_matrix(w, ecfg.block, ecfg.tile),
+        bp=lower_matrix(w, ecfg.block, ecfg.tile, ecfg.precision),
         bias=np.asarray(b, np.float32).copy(),
     )
 
@@ -121,6 +152,7 @@ def compile_network(
     params: dict,
     pattern_bits: dict[str, np.ndarray] | None = None,
     ecfg: EngineConfig = EngineConfig(),
+    precision: str | None = None,
 ) -> CompiledNetwork:
     """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
 
@@ -130,8 +162,11 @@ def compile_network(
       pattern_bits: per-conv packed 3x3 pattern bitmasks
         (``PruneResult.pattern_bits``); recovered from the weights' nonzero
         structure for layers not listed.
-      ecfg: spmm lowering geometry.
+      ecfg: spmm lowering geometry (block/tile, stored precision).
+      precision: shorthand override of ``ecfg.precision`` ('fp32'/'int8').
     """
+    if precision is not None:
+        ecfg = dataclasses.replace(ecfg, precision=precision)
     pattern_bits = pattern_bits or {}
     convs = []
     hw = cfg.input_hw
@@ -153,5 +188,6 @@ def compile_network(
             hw //= 2
     fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg)
     return CompiledNetwork(
-        config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile
+        config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile,
+        precision=ecfg.precision, cell_bits=ecfg.cell_bits,
     )

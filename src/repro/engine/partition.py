@@ -101,16 +101,22 @@ def pad_bp_tiles(bp: BlockPatternWeight, shards: int) -> BlockPatternWeight:
     gather block 0 and multiply by zeros) and ``nnz == 0``.  ``n_out`` and
     the permutations are untouched: padded output columns sit past every
     ``inv_order`` entry, so the inverse permutation drops them and
-    ``dense()`` reconstructs the identical matrix.
+    ``dense()`` reconstructs the identical matrix.  Quantized weights pad
+    ``w_scales`` with zeros too, so padding tiles dequantize to exact
+    zeros on every backend.
     """
     pad = padded_tiles(bp.n_tiles, shards) - bp.n_tiles
     if pad == 0:
         return bp
+    extra = {}
+    if bp.w_scales is not None:
+        extra["w_scales"] = jnp.pad(bp.w_scales, ((0, pad), (0, 0)))
     return dataclasses.replace(
         bp,
         w_comp=jnp.pad(bp.w_comp, ((0, pad), (0, 0), (0, 0), (0, 0))),
         block_ids=jnp.pad(bp.block_ids, ((0, pad), (0, 0))),
         nnz=np.pad(np.asarray(bp.nnz), (0, pad)).astype(np.int32),
+        **extra,
     )
 
 

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.crossbar import EnergyModel
 from repro.core.mapping import CrossbarConfig
+from repro.core.quantize import WEIGHT_BITS, n_cell_slices
 from repro.core.patterns import PatternDict
 from repro.core.simulator import simulate_layer_multi
 from repro.core.sparse import BlockPatternWeight, block_density
@@ -74,6 +75,13 @@ class CompiledNetwork:
     ``data`` shards (``engine/partition.py``).  The executor realizes it
     when given a mesh; ``hardware_report`` derives its per-chip view from
     it; ``serialize.py`` persists it.
+
+    ``precision`` records the stored weight representation ('fp32', or
+    'int8' for per-row-group quantized bricks + scales) and ``cell_bits``
+    the RRAM cell width those weights are sliced over;
+    ``hardware_report`` prices crossbar area from the *stored* cell-slice
+    count instead of the assumed-width default whenever the program is
+    quantized.
     """
 
     config: CNNConfig
@@ -82,6 +90,20 @@ class CompiledNetwork:
     block: int
     tile: int
     partition: NetworkPartition | None = None
+    precision: str = "fp32"
+    cell_bits: int = 4
+
+    @property
+    def cells_per_weight(self) -> int | None:
+        """Cell slices each stored weight occupies, from actual storage.
+
+        int8 programs: ``ceil(8 / cell_bits)`` (2 for 4-bit cells).  fp32
+        programs store no cell slices — returns None and pricing keeps
+        the crossbar model's assumed width.
+        """
+        if self.precision == "int8":
+            return n_cell_slices(self.cell_bits)
+        return None
 
     @property
     def num_ops(self) -> int:
@@ -102,14 +124,27 @@ class CompiledNetwork:
         return ops
 
     def weight_bytes(self) -> tuple[int, int]:
-        """(compressed, dense) fp32 weight bytes across all spmm ops."""
+        """(compressed, dense-fp32) weight bytes across all spmm ops.
+
+        Compressed bytes use the *stored* element width (1 byte per int8
+        weight plus its fp32 row-group scales; 4 bytes per fp32 weight),
+        so the quantized storage win is visible next to the dense size.
+        """
         comp = dense = 0
         for c in self.convs:
-            comp += int(np.sum(c.bp.nnz)) * c.bp.block * c.bp.tile * 4
+            comp += self._bp_bytes(c.bp)
             dense += c.k_unpadded * c.c_out * 4
-        comp += int(np.sum(self.fc.bp.nnz)) * self.fc.bp.block * self.fc.bp.tile * 4
+        comp += self._bp_bytes(self.fc.bp)
         dense += self.fc.d_in * self.fc.d_out * 4
         return comp, dense
+
+    @staticmethod
+    def _bp_bytes(bp) -> int:
+        itemsize = np.dtype(np.asarray(bp.w_comp).dtype).itemsize
+        n = int(np.sum(bp.nnz)) * bp.block * bp.tile * itemsize
+        if bp.w_scales is not None:
+            n += int(np.sum(bp.nnz)) * 4  # one fp32 scale per stored brick
+        return n
 
     def _synthetic_layers(self) -> list[SyntheticLayer]:
         """The convs as ``SyntheticLayer``s for crossbar-model pricing."""
@@ -222,7 +257,18 @@ class CompiledNetwork:
         energy / cycles over that many tile-parallel devices; with
         ``n_chips=None`` the view is derived from ``self.partition`` when
         the program carries one (model shards x data replicas).
+
+        Cell precision: for an int8 program the crossbar model's
+        ``cells_per_weight`` is overridden with the cell-slice count the
+        stored weights actually occupy (``ceil(8 / cell_bits)``) — the
+        area/energy numbers price what the executor runs, not an assumed
+        16-bit width; the ``precision`` section reports which happened.
         """
+        stored_cells = self.cells_per_weight
+        if stored_cells is not None and stored_cells != config.cells_per_weight:
+            config = dataclasses.replace(
+                config, cells_per_weight=stored_cells
+            )
         syn = self._synthetic_layers()
 
         dists = {}
@@ -290,6 +336,13 @@ class CompiledNetwork:
             "naive_energy_pj": tot(layers, "naive_energy_pj"),
             "cycles": tot(layers, "ours_cycles"),
             "index_kb": tot(layers, "index_bits") / 8.0 / 1024.0,
+        }
+        rep["precision"] = {
+            "weights": self.precision,
+            "weight_bits": WEIGHT_BITS if self.precision == "int8" else 32,
+            "cell_bits": self.cell_bits,
+            "cells_per_weight": config.cells_per_weight,
+            "derived_from_storage": stored_cells is not None,
         }
 
         e_noskip = rep["energy_pj"]

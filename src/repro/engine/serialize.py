@@ -4,10 +4,13 @@ Layout mirrors ``checkpoint/checkpointer.py``: one ``.npy`` per array plus
 a fsynced ``program.json`` manifest, written into a ``.tmp`` directory and
 ``os.replace``d only when complete, so a crashed writer never leaves a
 half-written program that a loader would pick up.  The round trip is
-bit-exact: every array is stored verbatim (float payloads as fp32, index
+bit-exact: every array is stored verbatim (float payloads as fp32,
+quantized payloads as int8 with their fp32 row-group scales, index
 streams as int32/int64).  A ``CompiledNetwork.partition``
 (``engine/partition.py``) rides along in the manifest, so a program
-partitioned for an N-chip mesh reloads ready to serve from one.
+partitioned for an N-chip mesh reloads ready to serve from one; the
+stored ``precision`` / ``cell_bits`` reload the same way (format v2 —
+v1 programs load as fp32).
 """
 
 from __future__ import annotations
@@ -27,7 +30,8 @@ from repro.models.cnn import CNNConfig
 __all__ = ["save_program", "load_program"]
 
 _MANIFEST = "program.json"
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2  # v2 adds precision/cell_bits + per-bp w_scales
+_SUPPORTED_VERSIONS = (1, 2)
 
 
 def _save_array(directory: str, name: str, arr) -> str:
@@ -40,6 +44,10 @@ def _save_array(directory: str, name: str, arr) -> str:
 
 
 def _bp_manifest(prefix: str, bp: BlockPatternWeight, directory: str) -> dict:
+    fields = ["w_comp", "block_ids", "nnz", "new_order", "inv_order",
+              "dict_masks"]
+    if bp.w_scales is not None:
+        fields.append("w_scales")
     return {
         "k_in": bp.k_in,
         "n_out": bp.n_out,
@@ -47,8 +55,7 @@ def _bp_manifest(prefix: str, bp: BlockPatternWeight, directory: str) -> dict:
         "tile": bp.tile,
         "arrays": {
             field: _save_array(directory, f"{prefix}.{field}", getattr(bp, field))
-            for field in ("w_comp", "block_ids", "nnz", "new_order",
-                          "inv_order", "dict_masks")
+            for field in fields
         },
     }
 
@@ -57,6 +64,7 @@ def _load_bp(entry: dict, directory: str) -> BlockPatternWeight:
     def arr(field):
         return np.load(os.path.join(directory, entry["arrays"][field]))
 
+    has_scales = "w_scales" in entry["arrays"]
     return BlockPatternWeight(
         w_comp=jnp.asarray(arr("w_comp")),
         block_ids=jnp.asarray(arr("block_ids")),
@@ -68,6 +76,7 @@ def _load_bp(entry: dict, directory: str) -> BlockPatternWeight:
         block=int(entry["block"]),
         tile=int(entry["tile"]),
         dict_masks=arr("dict_masks"),
+        w_scales=jnp.asarray(arr("w_scales")) if has_scales else None,
     )
 
 
@@ -85,6 +94,8 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
         "format_version": _FORMAT_VERSION,
         "block": program.block,
         "tile": program.tile,
+        "precision": program.precision,
+        "cell_bits": program.cell_bits,
         "config": {
             "conv_channels": [list(c) for c in cfg.conv_channels],
             "pool_after": sorted(cfg.pool_after),
@@ -148,7 +159,7 @@ def load_program(directory: str) -> CompiledNetwork:
             directory = old
     with open(os.path.join(directory, _MANIFEST)) as f:
         manifest = json.load(f)
-    if manifest.get("format_version") != _FORMAT_VERSION:
+    if manifest.get("format_version") not in _SUPPORTED_VERSIONS:
         raise ValueError(
             f"unsupported program format {manifest.get('format_version')!r}"
         )
@@ -189,4 +200,6 @@ def load_program(directory: str) -> CompiledNetwork:
         block=manifest["block"],
         tile=manifest["tile"],
         partition=NetworkPartition.from_manifest(part) if part else None,
+        precision=manifest.get("precision", "fp32"),
+        cell_bits=int(manifest.get("cell_bits", 4)),
     )

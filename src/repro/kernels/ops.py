@@ -16,11 +16,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse import BlockPatternWeight, pattern_spmm_xla
+from repro.core.quantize import quantize_rows
+from repro.core.sparse import (
+    BlockPatternWeight,
+    pattern_spmm_xla,
+    pattern_spmm_xla_quant,
+)
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ou_mvm import ou_mvm_pallas
-from repro.kernels.pattern_spmm import pattern_spmm_pallas
+from repro.kernels.pattern_spmm import (
+    pattern_spmm_pallas,
+    pattern_spmm_pallas_quant,
+)
 
 __all__ = [
     "default_backend",
@@ -68,6 +76,7 @@ def pattern_spmm_raw(
     backend: str | None = None,
     interpret: bool | None = None,
     bm: int | None = None,
+    w_scales: jax.Array | None = None,
 ) -> jax.Array:
     """Compressed spmm in *reordered* column order (no inverse permutation).
 
@@ -76,20 +85,40 @@ def pattern_spmm_raw(
     device runs it on its slab of tiles and the partial outputs are
     psum-combined *before* the Output Indexing Unit un-permutes columns.
     ``pattern_spmm`` is this plus the inverse permutation.
+
+    With ``w_scales`` (int8 ``w_comp`` + per-brick row-group scales,
+    ``core/quantize.py``) the activations are dynamically quantized per
+    row and the int8-input/int32-accumulate kernel variant runs; the
+    weight-scale dequant folds into the accumulator and the activation
+    row scale multiplies in the output epilogue here.  Output is fp32.
     """
     backend = backend or default_backend()
+    quant = w_scales is not None
+    if quant:
+        xq, x_scale = quantize_rows(xm)
     if backend == "pallas":
         interp = (
             interpret if interpret is not None else jax.default_backend() != "tpu"
         )
-        m = xm.shape[0]
+        xin = xq if quant else xm
+        m = xin.shape[0]
         if bm is None:
-            bm = _pick_bm(m, xm.dtype)
-        xp = _pad_to(xm, 0, bm)
+            bm = _pick_bm(m, xin.dtype)
+        xp = _pad_to(xin, 0, bm)
+        if quant:
+            y = pattern_spmm_pallas_quant(
+                xp, w_comp, block_ids, w_scales,
+                block=block, bm=bm, interpret=interp,
+            )[:m]
+            return y * x_scale[:, None]
         return pattern_spmm_pallas(
             xp, w_comp, block_ids, block=block, bm=bm, interpret=interp
         )[:m]
     if backend == "xla":
+        if quant:
+            return pattern_spmm_xla_quant(
+                xq, x_scale, w_comp, block_ids, w_scales, block
+            )
         return pattern_spmm_xla(xm, w_comp, block_ids, block)
     raise ValueError(f"unknown backend {backend!r}")
 
@@ -104,12 +133,14 @@ def pattern_spmm(
     """y = x @ W for a block-pattern compressed weight.  x: [..., K].
 
     ``bm=None`` (default) autotunes the row tile from the batch size.
+    Quantized weights (``bp.w_scales is not None``) dispatch the int8
+    variant transparently; output dtype follows ``x`` either way.
     """
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
     y = pattern_spmm_raw(
         xm, bp.w_comp, bp.block_ids, bp.block,
-        backend=backend, interpret=interpret, bm=bm,
+        backend=backend, interpret=interpret, bm=bm, w_scales=bp.w_scales,
     )
     y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)
     return y.reshape(*lead, bp.n_out).astype(x.dtype)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pattern_spmm_pallas"]
+__all__ = ["pattern_spmm_pallas", "pattern_spmm_pallas_quant"]
 
 
 def _kernel(ids_ref, x_ref, w_ref, o_ref, acc_ref):
@@ -96,3 +96,78 @@ def pattern_spmm_pallas(
         name="pattern_spmm",
     )
     return fn(block_ids, x, w_comp)
+
+
+def _kernel_quant(ids_ref, wscale_ref, x_ref, w_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 on the MXU; the brick's row-group dequant scale
+    # (prefetched to SMEM alongside the index table) folds into the fp32
+    # accumulator, so accumulation across bricks stays exact in fp32
+    part = jnp.dot(
+        x_ref[...], w_ref[0, 0], preferred_element_type=jnp.int32
+    )
+    acc_ref[...] += wscale_ref[j, k] * part.astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "bm", "interpret", "out_dtype")
+)
+def pattern_spmm_pallas_quant(
+    xq: jax.Array,
+    w_comp: jax.Array,
+    block_ids: jax.Array,
+    w_scales: jax.Array,
+    block: int = 128,
+    bm: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """Int-quantized variant: xq int8 [M, K]; w_comp int8 bricks with
+    per-brick row-group scales ``w_scales`` [T, k_max].
+
+    Returns fp32 partial output [M, T*tile] in reordered column order,
+    already dequantized on the weight side; the caller multiplies the
+    per-row activation scale in its epilogue (ops.pattern_spmm_raw) and
+    applies the inverse permutation.  Grid and specs mirror
+    :func:`pattern_spmm_pallas`; ``w_scales`` is the second scalar-prefetch
+    operand so each grid step reads its brick scale from SMEM.
+    """
+    m, k_in = xq.shape
+    t, k_max, blk, tile = w_comp.shape
+    assert blk == block and k_in % block == 0
+
+    grid = (pl.cdiv(m, bm), t, k_max)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (bm, block), lambda i, j, k, ids, ws: (i, ids[j, k])
+            ),
+            pl.BlockSpec(
+                (1, 1, block, tile), lambda i, j, k, ids, ws: (j, k, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((bm, tile), lambda i, j, k, ids, ws: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, tile), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        _kernel_quant,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, t * tile), out_dtype),
+        interpret=interpret,
+        name="pattern_spmm_quant",
+    )
+    return fn(block_ids, w_scales, xq, w_comp)

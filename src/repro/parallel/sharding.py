@@ -132,26 +132,31 @@ def tree_shardings(specs, shapes, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
 
 # Logical axis specs of a BlockPatternWeight's device operands: the tile
 # axis is the tensor-parallel dimension of the compressed spmm (the
-# 'tiles' rule above), everything else replicates.
+# 'tiles' rule above), everything else replicates.  ``w_scales`` only
+# exists on quantized weights and shards the same way as its bricks.
 BP_LOGICAL_SPECS: dict[str, tuple[str | None, ...]] = {
     "w_comp": ("tiles", None, None, None),
     "block_ids": ("tiles", None),
+    "w_scales": ("tiles", None),
 }
 
 
 def shard_block_pattern(bp, mesh: Mesh, model_axis: str = "model"):
     """Tile-shard a ``BlockPatternWeight``'s device operands over ``mesh``.
 
-    Places ``w_comp`` / ``block_ids`` with a NamedSharding that splits the
-    tile axis over ``model_axis`` (replicating when the axis is absent
-    from the mesh or does not divide ``n_tiles`` — callers pad first, see
+    Places ``w_comp`` / ``block_ids`` (and ``w_scales`` when quantized)
+    with a NamedSharding that splits the tile axis over ``model_axis``
+    (replicating when the axis is absent from the mesh or does not divide
+    ``n_tiles`` — callers pad first, see
     ``engine/partition.pad_bp_tiles``).  Host-side metadata (``nnz``,
     permutations) is untouched.  Returns a new dataclass instance.
     """
     rules = AxisRules(rules=(("tiles", (model_axis,)),))
     placed = {}
     for field, spec in BP_LOGICAL_SPECS.items():
-        arr = getattr(bp, field)
+        arr = getattr(bp, field, None)
+        if arr is None:
+            continue
         pspec = logical_to_pspec(spec, tuple(arr.shape), mesh, rules)
         placed[field] = jax.device_put(arr, NamedSharding(mesh, pspec))
     return dataclasses.replace(bp, **placed)

@@ -165,6 +165,37 @@ def test_serialize_roundtrip_partition_metadata(mini, tmp_path):
     assert "chips" not in prog3.hardware_report()
 
 
+def test_serialize_roundtrip_quantized(mini, tmp_path):
+    """Quantized programs round-trip bit-exactly: int8 payloads, fp32
+    row-group scales, precision/cell_bits and partition metadata all
+    survive, and the reloaded program executes identically."""
+    from repro.engine import partition_network
+
+    cfg, params, bits, _ = mini
+    progq = partition_network(
+        compile_network(cfg, params, bits, precision="int8"), data=2, model=2
+    )
+    path = save_program(str(tmp_path / "progq"), progq)
+    prog2 = load_program(path)
+
+    assert prog2.precision == "int8"
+    assert prog2.cell_bits == progq.cell_bits
+    assert prog2.partition == progq.partition
+    for a, b in zip([*progq.convs, progq.fc], [*prog2.convs, prog2.fc]):
+        wa, wb = np.asarray(a.bp.w_comp), np.asarray(b.bp.w_comp)
+        assert wa.dtype == wb.dtype == np.int8
+        np.testing.assert_array_equal(wa, wb)
+        sa, sb = np.asarray(a.bp.w_scales), np.asarray(b.bp.w_scales)
+        assert sa.dtype == sb.dtype == np.float32
+        np.testing.assert_array_equal(sa, sb)
+
+    x = jax.random.normal(jax.random.PRNGKey(17), (3, 1, 12, 12))
+    np.testing.assert_array_equal(
+        np.asarray(execute(progq, x, backend="xla")),
+        np.asarray(execute(prog2, x, backend="xla")),
+    )
+
+
 def test_save_is_atomic(mini, tmp_path):
     """A second save over an existing program replaces it cleanly."""
     *_, prog = mini

@@ -112,6 +112,44 @@ def test_single_device_mesh_runs_everywhere(uneven):
     np.testing.assert_array_equal(out, ref)
 
 
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_sharded_quantized_forward(n):
+    """Int8 programs shard the same way: w_scales slabs ride with their
+    tiles through shard_map.  Unlike fp32, sharded vs single-device is
+    bounded by *quantization* error, not fp32 noise: a one-ulp
+    reassociation difference in one layer's psum can flip an int8
+    rounding in the next layer's dynamic activation quantization,
+    amplifying to O(row_scale/2) — observed ~1e-4 here, asserted at the
+    composed quantization bound."""
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices")
+    cfg, prog = _pruned_program()
+    progq = _pruned_program_quantized()
+    # batch 64 so the agreement bars below tolerate a couple of argmax
+    # flips on near-tied logits (this net is random-init and 0.7-pruned)
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 1, 12, 12))
+    ref = np.asarray(make_forward(progq[1], backend="xla")(x))
+    out = np.asarray(
+        make_forward(progq[1], backend="xla", mesh=_mesh(1, n))(x)
+    )
+    np.testing.assert_allclose(out, ref, atol=5e-3)
+    assert (out.argmax(-1) == ref.argmax(-1)).mean() >= 0.98
+    # and the quantized sharded run agrees with fp32 to quantization error
+    ref_fp = np.asarray(make_forward(prog, backend="xla")(x))
+    assert (out.argmax(-1) == ref_fp.argmax(-1)).mean() >= 0.95
+
+
+def _pruned_program_quantized():
+    cfg = mini_cnn_config(num_classes=5, input_hw=12, widths=(8, 16, 24))
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, 0.7)
+    dicts = build_dictionaries(params, names, 4)
+    params, bits = project_params(params, dicts)
+    ecfg = EngineConfig(block=9, tile=8, precision="int8")
+    return cfg, compile_network(cfg, params, bits, ecfg=ecfg)
+
+
 # ---------------------------------------------------------------- subprocess
 
 

@@ -1,0 +1,66 @@
+"""Hypothesis properties of the int quantization scheme (core/quantize).
+
+Deterministic counterparts of these checks run in ``tests/test_quantize.py``
+so environments without hypothesis still cover the bounds; this module
+fuzzes the same invariants across seeds, magnitudes and cell widths.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (
+    QMAX,
+    cell_slices,
+    compose_cell_slices,
+    dequantize_groups,
+    group_scales,
+    n_cell_slices,
+    quantize_bp,
+    quantize_groups,
+)
+from repro.core.sparse import build_block_pattern, nonzero_block_masks
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale_pow=st.integers(-6, 6))
+def test_quantize_dequantize_error_bounded_by_group_scale(seed, scale_pow):
+    """|w - s*q| <= s/2 elementwise, per group (round-to-nearest bound)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(3, 4, 8, 8)).astype(np.float32) * 10.0**scale_pow
+    w[0, 0] = 0.0  # an all-zero group must survive (scale 0, exact)
+    scales = group_scales(w, group_ndim=2)
+    q = quantize_groups(w, scales, group_ndim=2)
+    back = dequantize_groups(q, scales, group_ndim=2)
+    bound = scales[:, :, None, None] / 2 * (1 + 1e-5) + 1e-30
+    assert (np.abs(back - w) <= bound).all()
+    assert np.abs(q).max() <= QMAX
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cell_bits=st.integers(2, 8))
+def test_cell_slices_roundtrip(seed, cell_bits):
+    """Sign-magnitude cell decomposition is lossless and fits the cells."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-QMAX, QMAX + 1, size=(5, 7), dtype=np.int8)
+    s = cell_slices(q, cell_bits)
+    assert s.shape == q.shape + (n_cell_slices(cell_bits),)
+    assert s.max() < 2**cell_bits
+    np.testing.assert_array_equal(compose_cell_slices(s, cell_bits), q)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantized_bp_dense_within_bound(seed):
+    """dense() of a quantized weight errs at most scale/2 per element."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(64, 48)).astype(np.float32)
+    w[rng.random(w.shape) < 0.5] = 0.0
+    bp = build_block_pattern(w, block=16, tile=8, masks=nonzero_block_masks(w, 16))
+    qbp = quantize_bp(bp)
+    assert qbp.precision == "int8"
+    err = np.abs(np.asarray(qbp.dense()) - np.asarray(bp.dense()))
+    max_scale = float(np.asarray(qbp.w_scales).max())
+    assert err.max() <= max_scale / 2 * (1 + 1e-5)
