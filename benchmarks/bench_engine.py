@@ -13,6 +13,11 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
     through the int8-input/int32-accumulate kernel — accuracy delta
     (max-abs logit difference and top-1 agreement vs the fp32 engine)
     next to the crossbar-area/energy win the narrower cells buy,
+  * a ``service`` throughput entry: ``InferenceService`` draining a
+    bursty 100-request trace at fixed ``batch_slots`` through the
+    continuous-batching scheduler — requests/s, mean occupancy/latency,
+    the single-trace guarantee (``trace_count``) and the exactness of the
+    accumulated skip statistics vs a one-shot stats forward,
   * a 1-vs-N-device sharded-execution entry: the same compiled program
     run unsharded and tile/batch-sharded over a mesh of N virtualized
     host devices (subprocess, ``--xla_force_host_platform_device_count``),
@@ -47,6 +52,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +67,12 @@ from repro.core.pruning import (
 )
 from repro.core.simulator import simulate_dataset
 from repro.core.synthetic import synthesize_network
-from repro.engine import compile_network, make_forward
+from repro.engine import (
+    ClassifyRequest,
+    InferenceService,
+    compile_network,
+    make_forward,
+)
 from repro.models.cnn import (
     CNNConfig,
     cnn_apply,
@@ -94,7 +107,14 @@ def _quantized_entry(cfg, params, bits, x, fp32_fn, fp32_us, rep_fp32):
 
     Timing uses the bench batch ``x``; the accuracy numbers use a larger
     synthetic eval batch so top-1 agreement has finer granularity than
-    the baseline gate's slack (one argmax flip must not fail CI)."""
+    the baseline gate's slack (one argmax flip must not fail CI).
+
+    Deep *random-init* networks (the vgg16 entry) report noticeably
+    lower agreement than trained ones: per-sample ``channel_norm``
+    divides by a std computed from the (quantization-noisy) activations
+    of each sample, so int8 scale noise compounds layer over layer and
+    random-init logits are near-tied to begin with.  The trained mini
+    example and the smoke gate sit at 100% agreement."""
     progq = compile_network(cfg, params, bits, precision="int8")
     q_fn = make_forward(progq, backend="xla")
     _, q_us = timed(lambda: jax.block_until_ready(q_fn(x)), repeats=3)
@@ -192,6 +212,87 @@ def _bench_network(name: str, cfg: CNNConfig, batch: int,
         )
     return {"network": name, "batch": batch, "input_hw": cfg.input_hw,
             "levels": entries}
+
+
+# Bursty arrival trace for the service-throughput entry: burst sizes are
+# fixed (not drawn at bench time) so batches_run / occupancy are
+# deterministic and the baseline can gate them exactly.
+SERVICE_BURSTS = (1, 7, 19, 2, 30, 5, 11, 3, 22)  # 100 requests
+SERVICE_SLOTS = 8
+
+
+def _service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
+    """Requests/s of ``InferenceService`` under a bursty 100-request
+    arrival trace at fixed ``batch_slots``.
+
+    The service executes every batch at the one fixed slot shape (dead
+    slots zero-padded + masked), so the whole trace must hit a single
+    jitted trace; the entry records that (``trace_count``), the exactness
+    of the accumulated skip statistics vs a one-shot stats forward over
+    the same images (``stats_exact``), and an ``overhead_vs_forward``
+    ratio (service wall-clock per batch / bare forward wall-clock —
+    machine speed cancels, so the baseline can gate it loosely).
+    """
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params, bits = _pruned(cfg, 0.75, num_patterns=8, seed=1)
+    prog = compile_network(cfg, params, bits)
+    svc = InferenceService(prog, batch_slots=batch_slots, backend="xla",
+                           collect_stats=True)
+    n = sum(SERVICE_BURSTS)
+    images = np.array(jax.random.normal(
+        jax.random.PRNGKey(3), (n, cfg.conv_channels[0][0],
+                                cfg.input_hw, cfg.input_hw)
+    ), np.float32)
+
+    # warm the one trace outside the timed region, then reset the stats
+    # and metrics windows so the entry describes only the bursty trace
+    svc.serve([ClassifyRequest(image=images[0])])
+    svc.reset_stats()
+    svc.reset_metrics()
+    base_batches = svc.batches_run
+
+    reqs = [ClassifyRequest(image=img) for img in images]
+    it = iter(reqs)
+    t0 = time.perf_counter()
+    for burst in SERVICE_BURSTS:
+        for _ in range(burst):
+            svc.submit(next(it))
+        svc.step()
+    svc.run()
+    dt = time.perf_counter() - t0
+
+    batches = svc.batches_run - base_batches
+    fwd = make_forward(prog, backend="xla", collect_stats=True)
+    out, ref_stats = fwd(jnp.asarray(images))
+    jax.block_until_ready(out)
+    _, fwd_us = timed(
+        lambda: jax.block_until_ready(
+            svc._forward(jnp.asarray(images[:batch_slots]),
+                         np.ones(batch_slots, bool))[0]
+        ),
+        repeats=5,
+    )
+    stats_exact = all(
+        np.array_equal(svc.activation_stats.layers[k].counts,
+                       ref_stats.layers[k].counts)
+        and svc.activation_stats.layers[k].windows
+        == ref_stats.layers[k].windows
+        for k in ref_stats.layers
+    )
+    m = svc.metrics
+    return {
+        "requests": n,
+        "batch_slots": batch_slots,
+        "bursts": list(SERVICE_BURSTS),
+        "requests_per_s": n / max(dt, 1e-9),
+        "batches_run": batches,
+        "trace_count": svc.trace_count(),
+        "occupancy_mean": m["occupancy_mean"],
+        "latency_mean_s": m["latency_mean_s"],
+        "overhead_vs_forward": (dt * 1e6 / max(batches, 1))
+        / max(fwd_us, 1e-9),
+        "stats_exact": stats_exact,
+    }
 
 
 # The backend must see the forced host-device count before it initializes,
@@ -322,6 +423,7 @@ def collect(quick: bool = False, smoke: bool = False) -> dict:
         )
     report = {
         "networks": networks,
+        "service": _service_throughput(),
         "sharded": _sharded_throughput(
             n_devices=2 if smoke else (4 if quick else 8)
         ),
@@ -355,6 +457,16 @@ def run():
                 f";area_win={q['area_win_vs_fp32']:.2f}"
                 f";energy_win={q['energy_win_vs_fp32']:.2f}"
             )
+    sv = report["service"]
+    yield (
+        f"engine_service_{sv['batch_slots']}slots,"
+        f"{sv['requests_per_s']:.1f},"
+        f"requests={sv['requests']}"
+        f";batches={sv['batches_run']}"
+        f";traces={sv['trace_count']}"
+        f";occupancy={sv['occupancy_mean']:.2f}"
+        f";stats_exact={sv['stats_exact']}"
+    )
     sh = report["sharded"]
     if "error" not in sh:
         yield (

@@ -19,6 +19,12 @@ hardware model is deterministic:
   machine speed cancels) may not regress beyond ``--time-tol`` times the
   baseline ratio.
 
+The ``service`` entry is gated the same two ways: its scheduling is
+deterministic (fixed arrival trace -> exact ``batches_run`` /
+``occupancy_mean``, ``trace_count`` must be exactly 1, skip statistics
+must match the one-shot forward), while its wall-clock only enters
+through the loose ``overhead_vs_forward`` ratio.
+
 Exit code 0 when everything holds; 1 with a per-check report otherwise.
 Regenerate the baseline with the same ``--smoke`` run when an intentional
 change shifts the deterministic numbers.
@@ -131,6 +137,37 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
     for key in sorted(set(base_levels) & set(cur_levels)):
         tag = f"{key[0]} s={key[1]}"
         _check_level(c, tag, cur_levels[key], base_levels[key], time_tol, top1_slack)
+
+    sv, bsv = current.get("service"), baseline.get("service")
+    c.check(sv is not None, "service throughput entry missing")
+    if sv:
+        c.check(
+            sv.get("trace_count") == 1,
+            f"service traced the forward {sv.get('trace_count')} times "
+            "(must be exactly 1: fixed batch shape)",
+        )
+        c.check(
+            sv.get("stats_exact") is True,
+            "service skip statistics diverged from the one-shot forward",
+        )
+        c.check(
+            sv.get("batches_run", 0) > 0 and sv.get("requests_per_s", 0) > 0,
+            f"service ran no batches: {sv}",
+        )
+    if sv and bsv:
+        # the arrival trace is fixed, so scheduling is deterministic
+        c.close(sv["batches_run"], bsv["batches_run"],
+                "service: batches_run")
+        c.close(sv["occupancy_mean"], bsv["occupancy_mean"],
+                "service: occupancy_mean")
+        # loose wall-clock gate: per-batch service overhead over the bare
+        # forward is a ratio, so machine speed cancels
+        ovh, bovh = sv["overhead_vs_forward"], bsv["overhead_vs_forward"]
+        c.check(
+            ovh <= bovh * time_tol,
+            f"service overhead_vs_forward regressed "
+            f"{ovh:.2f} > {time_tol} x baseline {bovh:.2f}",
+        )
 
     sh = current.get("sharded", {})
     msg = f"sharded entry errored: {str(sh.get('error', ''))[:500]}"

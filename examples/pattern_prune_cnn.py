@@ -174,8 +174,12 @@ print(f"  hardware: {rep['crossbars']} crossbars "
 service = InferenceService(program, batch_slots=16, collect_stats=True)
 labels = service.classify(np.asarray(x))
 acc_served = float((labels == np.asarray(y)).mean())
+m = service.metrics
 print(f"[{time.time()-t0:5.1f}s] served {len(labels)} requests in "
       f"{service.batches_run} batches, accuracy {acc_served:.3f}")
+print(f"  scheduler: 1 traced batch shape ({service.trace_count()} trace), "
+      f"occupancy {m['occupancy_mean']:.0%}, "
+      f"mean latency {m['latency_mean_s']*1e3:.1f} ms")
 
 # -- 6. measured vs assumed energy --------------------------------------------
 # The service counted, per layer and OU row-group, how often an input

@@ -6,17 +6,25 @@ weights into compressed spmm operands (reorder -> compress -> index),
 ``executor`` runs it through the Pallas/XLA kernels (single-device or
 sharded over a mesh via ``partition`` — tile-parallel spmm with psum
 combine, batch-parallel service slots), ``serialize`` persists it,
-``service`` serves traffic over it, and ``stats`` measures
-activation-skip statistics on the served traffic so the crossbar energy
-pricing uses observed (not assumed) skip probabilities.
+``scheduler`` is the continuous-batching control plane (bounded queue,
+slot refill, validity mask, latency/occupancy metrics), ``service``
+serves traffic over it, and ``stats`` measures activation-skip
+statistics on the served traffic so the crossbar energy pricing uses
+observed (not assumed) skip probabilities.
 
-Note: the model's BN stand-in normalises over *batch* statistics, so
-logits depend on which requests share a batch; ``InferenceService``
-therefore runs partial generations at their natural size instead of
-zero-padding dead slots.
+Note: the model's BN stand-in (``channel_norm``) is per-sample, so a
+request's logits never depend on which other requests share its batch.
+``InferenceService`` exploits that to run every batch at the fixed
+``batch_slots`` shape — dead slots zero-padded and masked out of the
+statistics — so the forward traces exactly once for any traffic pattern.
 """
 
 from repro.engine.executor import execute, extract_patches, make_forward
+from repro.engine.scheduler import (
+    SchedulerFull,
+    SchedulerMetrics,
+    SlotScheduler,
+)
 from repro.engine.partition import (
     NetworkPartition,
     pad_bp_tiles,
@@ -59,6 +67,9 @@ __all__ = [
     "load_program",
     "ClassifyRequest",
     "InferenceService",
+    "SchedulerFull",
+    "SchedulerMetrics",
+    "SlotScheduler",
     "NetworkPartition",
     "pad_bp_tiles",
     "partition_from_mesh",

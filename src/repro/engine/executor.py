@@ -17,6 +17,14 @@ backend-agnostic: they ride alongside both the Pallas and the XLA spmm
 dispatch unchanged.  ``engine/stats.py`` aggregates them and
 ``CompiledNetwork.hardware_report`` prices energy/cycles from them.
 
+``channel_norm`` is strictly per-sample (spatial axes only), so every
+batch row is computed independently of its neighbours: the same image
+produces bit-identical logits alone, co-batched, or surrounded by
+zero-padded dead slots.  The serving scheduler exploits that by always
+executing one fixed ``batch_slots`` shape — the forward traces exactly
+once — and passing a row-validity mask that excludes dead slots from the
+skip counters and window totals, keeping the measured statistics exact.
+
 Quantized programs (``precision='int8'`` at compile time) run through the
 same dispatch unchanged: ``pattern_spmm`` sees the int8 bricks +
 row-group scales on the ``BlockPatternWeight`` and switches to the
@@ -39,6 +47,8 @@ fp32 tolerance and the measured statistics agree exactly.
 """
 
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +100,11 @@ def _pad_features(x: jax.Array, to: int) -> jax.Array:
 
 
 def zero_selection_counts(
-    patches: jax.Array, c_in: int, kk: int, masks: np.ndarray
+    patches: jax.Array,
+    c_in: int,
+    kk: int,
+    masks: np.ndarray,
+    row_valid: jax.Array | None = None,
 ) -> jax.Array:
     """Count all-zero input selections per OU row-group.
 
@@ -100,11 +114,18 @@ def zero_selection_counts(
     channel-c activations at ``masks[i]``'s positions are all zero — the
     selections the Input Preprocessing Unit would skip.  The all-zero
     pattern selects nothing and counts every window (vacuous all()).
+
+    row_valid: optional bool [M]; ``False`` rows are excluded from every
+    count.  The serving scheduler marks zero-padded dead batch slots this
+    way — an all-zero padded row would otherwise count as 100%-skippable
+    traffic and silently inflate the measured energy win.
     """
     m = patches.shape[0]
     z = patches.reshape(m, c_in, 1, kk) == 0.0
     keep = jnp.asarray(masks)[None, None]  # [1, 1, P, kk]
     all_zero = jnp.all(z | ~keep, axis=-1)  # [M, C, P]
+    if row_valid is not None:
+        all_zero = all_zero & row_valid[:, None, None]
     return all_zero.sum(axis=0, dtype=jnp.int32)
 
 
@@ -126,8 +147,8 @@ class _Dispatch:
             bm=self.bm,
         )
 
-    def counts(self, patches, c_in, kk, masks) -> jax.Array:
-        return zero_selection_counts(patches, c_in, kk, masks)
+    def counts(self, patches, c_in, kk, masks, row_valid=None) -> jax.Array:
+        return zero_selection_counts(patches, c_in, kk, masks, row_valid)
 
 
 class _ShardedDispatch(_Dispatch):
@@ -207,24 +228,33 @@ class _ShardedDispatch(_Dispatch):
         y = jnp.take(y, jnp.asarray(bp.inv_order), axis=1)
         return y.astype(x2d.dtype)
 
-    def counts(self, patches, c_in, kk, masks) -> jax.Array:
+    def counts(self, patches, c_in, kk, masks, row_valid=None) -> jax.Array:
         part = self.part
         dspec = self._data_spec(patches.shape[0])
         if dspec is None:
-            return zero_selection_counts(patches, c_in, kk, masks)
+            return zero_selection_counts(patches, c_in, kk, masks, row_valid)
 
-        def local(pl):
+        def local(pl, *rv):
             return jax.lax.psum(
-                zero_selection_counts(pl, c_in, kk, masks), part.data_axis
+                zero_selection_counts(
+                    pl, c_in, kk, masks, rv[0] if rv else None
+                ),
+                part.data_axis,
             )
 
+        args = (patches,)
+        in_specs: tuple = (P(dspec, None),)
+        if row_valid is not None:
+            # the per-sample validity rows shard with their patch rows
+            args += (row_valid,)
+            in_specs += (P(dspec),)
         return shard_map(
             local,
             mesh=self.mesh,
-            in_specs=(P(dspec, None),),
+            in_specs=in_specs,
             out_specs=P(None, None),
             check_rep=False,
-        )(patches)
+        )(*args)
 
 
 def _run_conv(
@@ -233,14 +263,18 @@ def _run_conv(
     disp: _Dispatch,
     prepared,
     stat_masks: np.ndarray | None = None,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array | None]:
     b, c, h, w = x.shape
     patches = extract_patches(x, op.kernel)  # [B, H, W, C*k*k]
     patches = patches.reshape(b * h * w, -1)
     counts = None
     if stat_masks is not None:
+        # every patch row belongs to one sample; dead-slot samples are
+        # excluded from the skip counters
+        row_valid = None if valid is None else jnp.repeat(valid, h * w)
         counts = disp.counts(
-            patches, op.c_in, op.kernel * op.kernel, stat_masks
+            patches, op.c_in, op.kernel * op.kernel, stat_masks, row_valid
         )
     patches = _pad_features(patches, op.bp.k_in)
     y = disp.spmm(patches, op.bp, prepared)
@@ -263,9 +297,18 @@ def _run_fc(
     return y[:, : op.d_out] + jnp.asarray(op.bias)
 
 
-def _layer_windows(program: CompiledNetwork, x_shape) -> dict[str, int]:
-    """Windows (input positions) each conv layer sees for this input."""
+def _layer_windows(
+    program: CompiledNetwork, x_shape, live_rows: int | None = None
+) -> dict[str, int]:
+    """Windows (input positions) each conv layer sees for this input.
+
+    ``live_rows`` overrides the batch size when some rows are dead slots
+    (serving validity mask): only live samples contribute windows, so the
+    measured skip fractions divide by exactly the traffic observed.
+    """
     b, _, h, w = x_shape
+    if live_rows is not None:
+        b = live_rows
     windows = {}
     for op in program.convs:
         windows[op.name] = b * h * w
@@ -298,8 +341,17 @@ def make_forward(
         (defaults to ``program.partition``, else derived from the mesh);
         validated against the mesh's axis sizes.
 
-    Returns: fn(x: [B, C, H, W]) -> logits [B, num_classes], or, with
-    ``collect_stats``, fn(x) -> (logits, :class:`ActivationStats`).
+    Returns: fn(x: [B, C, H, W], valid=None) -> logits [B, num_classes],
+    or, with ``collect_stats``, fn(x, valid=None) ->
+    (logits, :class:`ActivationStats`).  ``valid`` is an optional bool
+    [B] row-validity mask: the serving scheduler zero-pads dead batch
+    slots and marks them ``False`` so the fixed batch shape traces once
+    while the skip statistics (counters *and* window totals) cover only
+    live traffic.  ``channel_norm`` is per-sample, so dead rows never
+    influence live logits; their own outputs are meaningless and must be
+    dropped by the caller.  The returned callable exposes
+    ``fn.trace_count()``, the number of times the forward has been traced
+    (a retrace means a new batch shape hit the jit cache).
     """
     if mesh is None:
         if partition is not None:
@@ -320,11 +372,15 @@ def make_forward(
             )
             stat_masks[op.name] = masks
 
-    def forward(x: jax.Array):
+    traces = {"n": 0}
+
+    def forward(x: jax.Array, valid: jax.Array | None = None):
+        traces["n"] += 1  # python side effect: runs once per trace
         counts = {}
         for op in program.convs:
             x, cnt = _run_conv(
-                op, x, disp, prepared[op.name], stat_masks.get(op.name)
+                op, x, disp, prepared[op.name], stat_masks.get(op.name),
+                valid,
             )
             if cnt is not None:
                 counts[op.name] = cnt
@@ -333,21 +389,52 @@ def make_forward(
         return (logits, counts) if collect_stats else logits
 
     jitted = jax.jit(forward)
+
+    def _as_valid(valid):
+        return None if valid is None else jnp.asarray(valid, bool)
+
     if not collect_stats:
-        return jitted
+        def fn(x: jax.Array, valid=None) -> jax.Array:
+            return jitted(x, _as_valid(valid))
+    else:
+        def fn(
+            x: jax.Array, valid=None
+        ) -> tuple[jax.Array, ActivationStats]:
+            logits, counts = jitted(x, _as_valid(valid))
+            live = None if valid is None else int(np.asarray(valid).sum())
+            stats = stats_from_counts(
+                program.convs,
+                {k: np.asarray(v) for k, v in counts.items()},
+                _layer_windows(program, x.shape, live_rows=live),
+            )
+            return logits, stats
 
-    def forward_with_stats(
-        x: jax.Array,
-    ) -> tuple[jax.Array, ActivationStats]:
-        logits, counts = jitted(x)
-        stats = stats_from_counts(
-            program.convs,
-            {k: np.asarray(v) for k, v in counts.items()},
-            _layer_windows(program, x.shape),
+    fn.trace_count = lambda: traces["n"]
+    return fn
+
+
+# `execute`'s per-program forward cache would otherwise retain every mesh
+# ever passed (device buffers included) for the program's lifetime.
+_FORWARD_CACHE_MAX = 8
+
+
+def _dispatch_key(backend, interpret, bm, mesh, partition):
+    """Stable, value-based cache key for a dispatch configuration.
+
+    Meshes are fingerprinted by axis names/shape and device ids rather
+    than object identity, so two equal meshes share one cache entry and a
+    dropped mesh object is not pinned alive by the key.  ``partition`` is
+    a frozen dataclass and hashes by value already.
+    """
+    mesh_key = None
+    if mesh is not None:
+        devices = np.asarray(mesh.devices)
+        mesh_key = (
+            tuple(mesh.axis_names),
+            devices.shape,
+            tuple(int(d.id) for d in devices.ravel()),
         )
-        return logits, stats
-
-    return forward_with_stats
+    return (backend, interpret, bm, mesh_key, partition)
 
 
 def execute(
@@ -361,13 +448,23 @@ def execute(
 ) -> jax.Array:
     """One-shot convenience wrapper around :func:`make_forward`.
 
-    The jitted forward is cached on the program per dispatch options
-    (including the mesh/partition), so repeated calls don't re-trace.
+    The jitted forward is LRU-cached on the program per dispatch
+    configuration (mesh fingerprint, not identity), capped at
+    ``_FORWARD_CACHE_MAX`` entries so long-lived programs don't pin every
+    mesh/partition they ever executed on.
     """
-    cache = program.__dict__.setdefault("_forward_cache", {})
-    key = (backend, interpret, bm, mesh, partition)
-    if key not in cache:
-        cache[key] = make_forward(
+    cache = program.__dict__.get("_forward_cache")
+    if not isinstance(cache, OrderedDict):
+        cache = program.__dict__["_forward_cache"] = OrderedDict()
+    key = _dispatch_key(backend, interpret, bm, mesh, partition)
+    fwd = cache.get(key)
+    if fwd is None:
+        fwd = make_forward(
             program, backend, interpret, bm, mesh=mesh, partition=partition
         )
-    return cache[key](x)
+        cache[key] = fwd
+        while len(cache) > _FORWARD_CACHE_MAX:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return fwd(x)

@@ -1,0 +1,199 @@
+"""Continuous-batching slot scheduler: the serving control plane.
+
+Extracted from the control-plane skeleton of ``runtime/serve.py``'s
+``ServeLoop`` so both serving front ends — token generation there,
+classification in ``engine/service.py`` — share one scheduler instead of
+each reimplementing (and subtly breaking) queue/slot bookkeeping:
+
+  * a FIFO **request queue** with optional backpressure (``max_queue``;
+    :meth:`SlotScheduler.submit` raises :class:`SchedulerFull`,
+    :meth:`SlotScheduler.try_submit` returns ``False``),
+  * a fixed number of **batch slots**: the executing batch always has the
+    same shape, so the jitted forward is traced exactly once; free slots
+    are *dead* and carried as ``False`` entries of :meth:`valid_mask`,
+  * **continuous refill**: :meth:`refill` admits queued requests into
+    free slots the moment they free up — mid-flight for workloads whose
+    requests finish at different times, per batch for one-shot workloads,
+  * **metrics**: per-request enqueue->done latency and per-step slot
+    occupancy (:class:`SchedulerMetrics`), measured against an injectable
+    monotonic ``clock`` so tests can pin time.
+
+The scheduler is deliberately execution-agnostic: it never touches
+arrays.  The caller owns the batch buffer, writes admitted payloads into
+the slots :meth:`refill` hands out, runs its jitted step, and reports
+completions back via :meth:`complete`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["SchedulerFull", "SchedulerMetrics", "SlotScheduler"]
+
+
+class SchedulerFull(RuntimeError):
+    """Raised by :meth:`SlotScheduler.submit` when the bounded queue is
+    full — the backpressure signal a front end turns into HTTP 429/503."""
+
+
+@dataclasses.dataclass
+class SchedulerMetrics:
+    """Counters the scheduler accumulates while serving.
+
+    ``occupancy_sum`` adds the live-slot count once per recorded step, so
+    ``occupancy_mean`` is the average fraction of the fixed batch shape
+    doing useful work; latencies are enqueue->done wall-clock seconds.
+    """
+
+    batch_slots: int
+    enqueued: int = 0
+    completed: int = 0
+    rejected: int = 0
+    steps: int = 0
+    occupancy_sum: int = 0
+    latency_sum: float = 0.0
+    latency_max: float = 0.0
+
+    @property
+    def occupancy_mean(self) -> float:
+        """Mean live fraction of the batch over recorded steps, in [0, 1]."""
+        if self.steps == 0:
+            return 0.0
+        return self.occupancy_sum / (self.steps * self.batch_slots)
+
+    @property
+    def latency_mean(self) -> float:
+        if self.completed == 0:
+            return 0.0
+        return self.latency_sum / self.completed
+
+    def snapshot(self) -> dict:
+        return {
+            "batch_slots": self.batch_slots,
+            "enqueued": self.enqueued,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "steps": self.steps,
+            "occupancy_mean": self.occupancy_mean,
+            "latency_mean_s": self.latency_mean,
+            "latency_max_s": self.latency_max,
+        }
+
+
+class SlotScheduler:
+    """Fixed-slot continuous-batching scheduler (queue + slots + metrics).
+
+    Args:
+      batch_slots: number of slots in the fixed batch shape.
+      max_queue: queued-request bound; 0 means unbounded.  Requests beyond
+        the bound are rejected (``submit`` raises, ``try_submit`` returns
+        ``False``) — requests already admitted to slots don't count.
+      clock: monotonic time source for latency metrics (injectable so
+        tests are deterministic).
+    """
+
+    def __init__(
+        self,
+        batch_slots: int,
+        max_queue: int = 0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
+        self.batch_slots = batch_slots
+        self.max_queue = max_queue
+        self._clock = clock
+        self._queue: deque[tuple[Any, float]] = deque()
+        self._slots: list[Any | None] = [None] * batch_slots
+        self._enq_time: list[float] = [0.0] * batch_slots
+        self.metrics = SchedulerMetrics(batch_slots=batch_slots)
+
+    # ------------------------------------------------------------- admission
+
+    def has_capacity(self) -> bool:
+        """Whether the queue can accept a request right now — a probe
+        that, unlike :meth:`try_submit`, does not count a rejection."""
+        return not self.max_queue or len(self._queue) < self.max_queue
+
+    def try_submit(self, item: Any) -> bool:
+        """Enqueue ``item``; ``False`` (and a rejected tick) when full."""
+        if not self.has_capacity():
+            self.metrics.rejected += 1
+            return False
+        self._queue.append((item, self._clock()))
+        self.metrics.enqueued += 1
+        return True
+
+    def submit(self, item: Any) -> None:
+        """Enqueue ``item``; raise :class:`SchedulerFull` when full."""
+        if not self.try_submit(item):
+            raise SchedulerFull(
+                f"request queue full ({len(self._queue)}/{self.max_queue})"
+            )
+
+    def refill(self) -> list[tuple[int, Any]]:
+        """Admit queued requests into free slots, lowest slot first.
+
+        Returns the ``(slot, item)`` pairs admitted *now*; the caller
+        writes their payloads into exactly those batch rows.
+        """
+        admitted = []
+        for i in range(self.batch_slots):
+            if self._slots[i] is None and self._queue:
+                item, t_enq = self._queue.popleft()
+                self._slots[i] = item
+                self._enq_time[i] = t_enq
+                admitted.append((i, item))
+        return admitted
+
+    # ------------------------------------------------------------- occupancy
+
+    def live(self) -> list[tuple[int, Any]]:
+        """The currently occupied ``(slot, item)`` pairs."""
+        return [(i, it) for i, it in enumerate(self._slots) if it is not None]
+
+    def valid_mask(self) -> np.ndarray:
+        """Bool [batch_slots]: which rows of the fixed batch are live."""
+        return np.array([s is not None for s in self._slots], bool)
+
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def reset_metrics(self) -> None:
+        """Start a fresh metrics window (e.g. after a warm-up batch).
+
+        In-flight requests keep their original enqueue times, so their
+        latencies land in the new window when they complete.
+        """
+        self.metrics = SchedulerMetrics(batch_slots=self.batch_slots)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    # ------------------------------------------------------------ completion
+
+    def record_step(self) -> None:
+        """Account one executed batch step at the current occupancy."""
+        self.metrics.steps += 1
+        self.metrics.occupancy_sum += sum(
+            1 for s in self._slots if s is not None
+        )
+
+    def complete(self, slot: int) -> Any:
+        """Free ``slot``, record its request's latency, return the item."""
+        item = self._slots[slot]
+        if item is None:
+            raise ValueError(f"slot {slot} is not occupied")
+        self._slots[slot] = None
+        latency = max(self._clock() - self._enq_time[slot], 0.0)
+        self.metrics.completed += 1
+        self.metrics.latency_sum += latency
+        self.metrics.latency_max = max(self.metrics.latency_max, latency)
+        return item

@@ -1,30 +1,40 @@
 """Traffic-serving front end for compiled programs.
 
-``InferenceService`` mirrors ``runtime/serve.py``'s ``ServeLoop`` control
-plane for the classification workload: a fixed number of batch slots, a
-request queue drained generation by generation, and per-request results
-written back onto the request objects.  Full generations hit one jitted
-batch shape; a partial final generation runs at its natural size (one
-extra trace per distinct size, at most ``batch_slots`` ever) rather than
-being zero-padded — the model's BN stand-in normalises over *batch*
-statistics, so padded dead slots would contaminate real requests' logits.
+``InferenceService`` serves classification requests through the shared
+continuous-batching scheduler (``engine/scheduler.py``, the control plane
+extracted from ``runtime/serve.py``'s ``ServeLoop``): an optionally
+bounded request queue, a fixed number of batch slots refilled as they
+free up, and per-request latency / occupancy metrics.
+
+Every executed batch has the *same* ``[batch_slots, C, H, W]`` shape —
+free slots ride along as zero-padded dead rows flagged by a validity
+mask — so the jitted forward is traced exactly once, no matter how
+requests arrive.  ``channel_norm`` is per-sample, which makes that safe:
+a request's logits are bit-identical whether it runs alone, co-batched
+with other requests, or next to dead slots.
 
 With ``collect_stats=True`` every served batch also measures its
-activation-skip counters (``engine/stats.py``); the service accumulates
-them across requests into ``activation_stats``, so
-``service.hardware_report()`` prices energy from the skip probabilities
-*realized on the traffic actually served* rather than an assumption.
+activation-skip counters (``engine/stats.py``); the validity mask
+excludes dead slots from both the counters and the window totals, so the
+accumulated ``activation_stats`` equal a one-shot stats forward over
+exactly the served images and ``service.hardware_report()`` prices
+energy from the skip probabilities *realized on the traffic actually
+served* rather than an assumption.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.executor import make_forward
 from repro.engine.program import CompiledNetwork
+from repro.engine.scheduler import SlotScheduler
 from repro.engine.stats import ActivationStats
 
 __all__ = ["ClassifyRequest", "InferenceService"]
@@ -41,7 +51,7 @@ class ClassifyRequest:
 
 
 class InferenceService:
-    """Slot-based batched classification over a jitted engine forward."""
+    """Continuous-batching classification over a jitted engine forward."""
 
     def __init__(
         self,
@@ -52,13 +62,21 @@ class InferenceService:
         collect_stats: bool = False,
         mesh=None,
         partition=None,
+        max_queue: int = 0,
+        clock: Callable[[], float] = time.monotonic,
     ):
-        """With ``mesh=`` every generation executes sharded
+        """With ``mesh=`` every batch executes sharded
         (``engine/partition.py``): batch slots split over the mesh's data
-        axis, each layer's tiles over the model axis.  Full generations
-        shard when ``batch_slots`` divides by the data axis; a partial
-        final generation that doesn't falls back to replicated batch rows
-        inside the same mesh forward, keeping exact numerics either way.
+        axis, each layer's tiles over the model axis.  Because the batch
+        shape is always the full ``batch_slots``, the data axis divides
+        it whenever ``batch_slots % data == 0`` — partially filled
+        batches shard exactly like full ones instead of falling back to
+        replication.
+
+        ``max_queue`` bounds the number of waiting requests (0 =
+        unbounded); a full queue raises
+        :class:`~repro.engine.scheduler.SchedulerFull` from
+        :meth:`submit` — the backpressure signal under load.
         """
         self.program = program
         self.batch_slots = batch_slots
@@ -68,6 +86,13 @@ class InferenceService:
             program, backend=backend, interpret=interpret,
             collect_stats=collect_stats, mesh=mesh, partition=partition,
         )
+        self.scheduler = SlotScheduler(
+            batch_slots, max_queue=max_queue, clock=clock
+        )
+        shape = self._input_shape()
+        # persistent slot buffer: freed slots are zeroed, so the fixed
+        # batch is always "live images + zero padding"
+        self._slots_x = np.zeros((batch_slots, *shape), np.float32)
         self.batches_run = 0
         self.activation_stats: ActivationStats | None = None
 
@@ -75,8 +100,21 @@ class InferenceService:
         cfg = self.program.config
         return (cfg.conv_channels[0][0], cfg.input_hw, cfg.input_hw)
 
+    def trace_count(self) -> int:
+        """How many times the underlying forward has been traced."""
+        return self._forward.trace_count()
+
+    @property
+    def metrics(self) -> dict:
+        """Scheduler metrics: queue/latency/occupancy of the served load."""
+        return self.scheduler.metrics.snapshot()
+
     def reset_stats(self) -> None:
         self.activation_stats = None
+
+    def reset_metrics(self) -> None:
+        """Start a fresh scheduler-metrics window (e.g. post warm-up)."""
+        self.scheduler.reset_metrics()
 
     def _record_stats(self, stats: ActivationStats) -> None:
         self.activation_stats = (
@@ -84,29 +122,75 @@ class InferenceService:
             else self.activation_stats.merge(stats)
         )
 
-    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyRequest]:
-        """Drain ``requests`` through the fixed-slot batch loop."""
+    def _validate(self, img: np.ndarray) -> np.ndarray:
         shape = self._input_shape()
-        for start in range(0, len(requests), self.batch_slots):
-            batch = requests[start : start + self.batch_slots]
-            x = np.zeros((len(batch), *shape), np.float32)
-            for i, r in enumerate(batch):
-                img = np.asarray(r.image, np.float32)
-                if img.shape != shape:
-                    raise ValueError(
-                        f"request image {img.shape} != expected {shape}"
-                    )
-                x[i] = img
-            out = self._forward(x)
-            if self.collect_stats:
-                out, stats = out
-                self._record_stats(stats)
-            logits = np.asarray(jax.device_get(out))
-            self.batches_run += 1
-            for i, r in enumerate(batch):
-                r.logits = logits[i]
-                r.label = int(np.argmax(logits[i]))
-                r.done = True
+        img = np.asarray(img, np.float32)
+        if img.shape != shape:
+            raise ValueError(f"request image {img.shape} != expected {shape}")
+        return img
+
+    def submit(self, request: ClassifyRequest) -> ClassifyRequest:
+        """Validate and enqueue one request (raises ``SchedulerFull`` when
+        the bounded queue is full, ``ValueError`` on a bad image shape)."""
+        request.image = self._validate(request.image)
+        self.scheduler.submit(request)
+        return request
+
+    def step(self) -> list[ClassifyRequest]:
+        """Refill free slots from the queue and run one fixed-shape batch.
+
+        Returns the requests completed by this batch (empty when there
+        was nothing to serve).
+        """
+        sched = self.scheduler
+        for slot, req in sched.refill():
+            self._slots_x[slot] = req.image
+        valid = sched.valid_mask()
+        if not valid.any():
+            return []
+        out = self._forward(jnp.asarray(self._slots_x), valid)
+        if self.collect_stats:
+            out, stats = out
+            self._record_stats(stats)
+        logits = np.asarray(jax.device_get(out))
+        self.batches_run += 1
+        sched.record_step()
+        finished = []
+        for slot, req in sched.live():
+            req.logits = logits[slot]
+            req.label = int(np.argmax(logits[slot]))
+            req.done = True
+            sched.complete(slot)
+            self._slots_x[slot] = 0.0  # dead slots stay zero-padded
+            finished.append(req)
+        return finished
+
+    def run(self) -> list[ClassifyRequest]:
+        """Serve until the queue and every slot are drained."""
+        finished = []
+        while self.scheduler.has_work():
+            finished.extend(self.step())
+        return finished
+
+    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyRequest]:
+        """Drain ``requests`` through the scheduler.
+
+        All request shapes are validated *before* any batch runs, so a
+        malformed request rejects the whole call up front instead of
+        leaving earlier requests served and later ones untouched.
+        Submission interleaves with serving, so a bounded queue never
+        overflows from a large one-shot batch.
+        """
+        images = [self._validate(r.image) for r in requests]
+        for r, img in zip(requests, images):
+            r.image = img
+        pending = list(requests)
+        while pending or self.scheduler.has_work():
+            # capacity probe, not try_submit: a full queue mid-drain is
+            # backpressure handled here, not a rejection to count
+            while pending and self.scheduler.has_capacity():
+                self.scheduler.submit(pending.pop(0))
+            self.step()
         return requests
 
     def classify(self, images: np.ndarray) -> np.ndarray:

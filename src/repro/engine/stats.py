@@ -15,6 +15,11 @@ across batches/requests and convert them into the
 :class:`~repro.core.simulator.SkipDistribution` that
 ``CompiledNetwork.hardware_report`` prices energy and cycles from.
 
+Because ``channel_norm`` is per-sample, the counters are batch-composition
+independent at *every* layer: statistics accumulated over scheduler
+batches (dead slots masked out of counts and windows alike) are exactly
+equal to one stats forward over the concatenated live images.
+
 The (channel, pattern) pair is exactly the OU row-group identity: every
 OU of a pattern-pruned placement shares its block's channel and pattern
 (``core/ou.pattern_ou_schedule``), so one measured fraction per pair

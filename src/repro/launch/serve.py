@@ -54,6 +54,10 @@ def main(argv=None):
     total_new = sum(len(r.output) for r in reqs)
     print(f"{len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s)")
+    m = loop.metrics
+    print(f"scheduler: {m['steps']} steps, "
+          f"occupancy {m['occupancy_mean']:.0%}, "
+          f"mean latency {m['latency_mean_s']:.2f}s")
     for r in reqs[:3]:
         print("out:", r.output[:12])
     return reqs

@@ -102,12 +102,19 @@ def _conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def channel_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
-    """Per-channel scale normalisation (BN stand-in, stateless).
+    """Per-sample, per-channel scale normalisation (BN stand-in, stateless).
 
     Shared by ``cnn_apply`` and the compiled-engine executor so both paths
     apply bit-identical normalisation.  x: [B, C, H, W].
+
+    The reduction runs over the spatial axes ``(2, 3)`` only — never the
+    batch axis — so a sample's activations (and therefore its logits) do
+    not depend on which other samples share the batch.  That invariance is
+    what lets the serving layer zero-pad dead batch slots: an all-zero row
+    normalises against its own statistics and stays numerically inert for
+    every live row.
     """
-    return x / (jnp.std(x, axis=(0, 2, 3), keepdims=True) + eps)
+    return x / (jnp.std(x, axis=(2, 3), keepdims=True) + eps)
 
 
 def max_pool_2x2(x: jax.Array) -> jax.Array:

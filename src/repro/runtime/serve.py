@@ -4,21 +4,30 @@
 dry-run lowers for the decode_* / long_* shapes: one new token against a
 KV cache of ``seq_len`` (cache donated, so decode is in-place in HBM).
 
-``ServeLoop`` is a miniature continuous-batching scheduler: fixed slot
-count, greedy/temperature sampling, per-slot stop handling, slot refill
-from a request queue — the control plane a production server runs, minus
-the RPC front end.
+``ServeLoop`` is a miniature *generational* batching loop over the shared
+:class:`~repro.engine.scheduler.SlotScheduler` control plane: fixed slot
+count, greedy/temperature sampling, per-slot stop handling, and slot
+refill from the scheduler's request queue at generation boundaries.
+Admission is generational — not mid-decode — because prefill writes the
+whole batch's cache at position 0 and the decode step advances one
+*shared* scalar position for every slot; admitting a fresh prompt
+mid-decode would need per-slot positions and a slot-indexed prefill.
+(``engine/service.py`` serves the classification workload through the
+same scheduler with true per-batch refill, since its requests complete
+in a single step.)  The scheduler still supplies the queue, the slot
+bookkeeping, and the per-request latency / occupancy metrics
+(``loop.metrics`` after :meth:`ServeLoop.generate`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.scheduler import SlotScheduler
 from repro.models.transformer import ModelConfig, apply_model, init_cache
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_decode_step", "ServeLoop"]
@@ -83,11 +92,13 @@ class Request:
 
 
 class ServeLoop:
-    """Slot-based continuous batching over the jitted decode step.
+    """Slot-based generational batching over the jitted decode step.
 
-    Prefill is per-request (left-aligned into the slot's cache region);
-    decode advances all live slots together.  Finished slots are refilled
-    from the queue between decode steps.
+    Prefill is batch-wide (prompts left-padded to a shared length so the
+    one scalar decode position lines up for every slot); decode advances
+    all live slots together.  Slots refill from the shared scheduler's
+    queue at generation boundaries — see the module docstring for why
+    admission is not mid-decode.
     """
 
     def __init__(self, cfg: ModelConfig, statics, params, scfg: ServeConfig):
@@ -97,35 +108,35 @@ class ServeLoop:
         self.decode = jax.jit(
             make_decode_step(cfg, statics, scfg), donate_argnums=(1,)
         )
+        self.metrics: dict | None = None
 
     def generate(self, requests: list[Request]) -> list[Request]:
         scfg = self.scfg
+        sched = SlotScheduler(scfg.batch_slots)
+        for r in requests:
+            sched.submit(r)
         # all prompts in this miniature loop share a length per batch; pad
         maxlen = max(r.prompt.size for r in requests)
-        queue = list(requests)
-        slots: list[Request | None] = [None] * scfg.batch_slots
         caches = init_cache(
             self.statics, scfg.batch_slots, scfg.max_seq,
             dtype=jnp.dtype(scfg.cache_dtype),
         )
-        pos = 0
-        # simple generational batching: fill all slots, prefill as one
-        # batch, decode until all done, repeat
-        while queue or any(s is not None for s in slots):
-            batch_reqs = [queue.pop(0) for _ in range(min(len(queue), scfg.batch_slots))]
-            if not batch_reqs:
+        while sched.has_work():
+            admitted = sched.refill()  # generation boundary: all slots free
+            if not admitted:
                 break
             prompts = np.zeros((scfg.batch_slots, maxlen), np.int32)
-            for i, r in enumerate(batch_reqs):
-                prompts[i, -r.prompt.size :] = r.prompt  # left-pad
+            for slot, r in admitted:
+                prompts[slot, -r.prompt.size :] = r.prompt  # left-pad
             tok, caches = self.prefill(
                 self.params, caches, jnp.asarray(prompts)
             )
             tok_np = np.asarray(jax.device_get(tok))
-            for i, r in enumerate(batch_reqs):
-                r.output.append(int(tok_np[i]))
+            for slot, r in admitted:
+                r.output.append(int(tok_np[slot]))
+            sched.record_step()
             pos = maxlen
-            budget = max(r.max_new_tokens for r in batch_reqs) - 1
+            budget = max(r.max_new_tokens for _, r in admitted) - 1
             for _ in range(max(budget, 0)):
                 if pos >= scfg.max_seq:
                     break
@@ -133,18 +144,21 @@ class ServeLoop:
                     self.params, caches, jnp.asarray(tok_np), jnp.int32(pos)
                 )
                 tok_np = np.asarray(jax.device_get(tok))
-                for i, r in enumerate(batch_reqs):
+                for slot, r in admitted:
                     if not r.done and len(r.output) < r.max_new_tokens:
-                        t = int(tok_np[i])
+                        t = int(tok_np[slot])
                         r.output.append(t)
                         if t == scfg.eos_id:
                             r.done = True
+                sched.record_step()
                 pos += 1
                 if all(
                     r.done or len(r.output) >= r.max_new_tokens
-                    for r in batch_reqs
+                    for _, r in admitted
                 ):
                     break
-            for r in batch_reqs:
+            for slot, r in admitted:
                 r.done = True
+                sched.complete(slot)
+        self.metrics = sched.metrics.snapshot()
         return requests

@@ -148,13 +148,13 @@ def test_stats_merge_accumulates(mini):
     _, sb = fwd(xb)
     merged = sa.merge(sb)
     _, sab = fwd(jnp.concatenate([xa, xb]))
+    # per-sample channel_norm makes every layer's counts independent of
+    # batch composition, so two merged batches equal the concatenated one
     for name in sab.layers:
         assert merged.layers[name].windows == sab.layers[name].windows
-        # deeper layers see batch-statistic normalisation, so only conv1's
-        # counts are batch-composition independent
-    np.testing.assert_array_equal(
-        merged.layers["conv1"].counts, sab.layers["conv1"].counts
-    )
+        np.testing.assert_array_equal(
+            merged.layers[name].counts, sab.layers[name].counts
+        )
 
 
 def test_counts_over_row_shards_sum_to_global(rng):

@@ -1,0 +1,123 @@
+"""SlotScheduler: refill order, backpressure, metrics (deterministic clock)."""
+
+import numpy as np
+import pytest
+
+from repro.engine.scheduler import SchedulerFull, SlotScheduler
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_refill_is_fifo_into_lowest_slots():
+    s = SlotScheduler(batch_slots=3)
+    for name in "abcde":
+        s.submit(name)
+    admitted = s.refill()
+    assert admitted == [(0, "a"), (1, "b"), (2, "c")]
+    assert s.queued() == 2
+    np.testing.assert_array_equal(s.valid_mask(), [True, True, True])
+
+    # freeing the middle slot refills it with the next queued request
+    assert s.complete(1) == "b"
+    np.testing.assert_array_equal(s.valid_mask(), [True, False, True])
+    assert s.refill() == [(1, "d")]
+    assert s.live() == [(0, "a"), (1, "d"), (2, "c")]
+
+    # drain everything
+    for slot, _ in list(s.live()):
+        s.complete(slot)
+    assert s.refill() == [(0, "e")]
+    s.complete(0)
+    assert not s.has_work()
+    assert s.refill() == []
+
+
+def test_backpressure_bounded_queue():
+    s = SlotScheduler(batch_slots=2, max_queue=2)
+    assert s.has_capacity()
+    assert s.try_submit("a") and s.try_submit("b")
+    assert not s.has_capacity()
+    assert s.metrics.rejected == 0  # the probe counts nothing
+    assert not s.try_submit("c")  # queue full
+    with pytest.raises(SchedulerFull):
+        s.submit("d")
+    assert s.metrics.rejected == 2
+    assert s.metrics.enqueued == 2
+    # admitted requests free queue capacity
+    s.refill()
+    assert s.has_capacity() and s.try_submit("c")
+    # an unbounded queue never rejects
+    u = SlotScheduler(batch_slots=1)
+    for i in range(100):
+        u.submit(i)
+    assert u.metrics.rejected == 0 and u.queued() == 100
+
+
+def test_latency_and_occupancy_metrics():
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=4, clock=clock)
+    s.submit("a")  # enqueued at t=0
+    clock.t = 1.0
+    s.submit("b")  # enqueued at t=1
+    s.refill()
+    s.record_step()  # 2 live of 4
+    clock.t = 3.0
+    s.complete(0)  # a: 3.0 - 0.0
+    s.complete(1)  # b: 3.0 - 1.0
+    s.submit("c")
+    s.refill()
+    s.record_step()  # 1 live of 4
+    clock.t = 4.0
+    s.complete(0)  # c: 4.0 - 3.0
+
+    m = s.metrics
+    assert m.completed == 3 and m.steps == 2
+    assert m.latency_max == pytest.approx(3.0)
+    assert m.latency_mean == pytest.approx((3.0 + 2.0 + 1.0) / 3)
+    assert m.occupancy_mean == pytest.approx((2 + 1) / (2 * 4))
+    snap = m.snapshot()
+    assert snap["latency_max_s"] == pytest.approx(3.0)
+    assert snap["batch_slots"] == 4
+
+
+def test_invalid_arguments_and_states():
+    with pytest.raises(ValueError):
+        SlotScheduler(batch_slots=0)
+    with pytest.raises(ValueError):
+        SlotScheduler(batch_slots=1, max_queue=-1)
+    s = SlotScheduler(batch_slots=2)
+    with pytest.raises(ValueError, match="not occupied"):
+        s.complete(0)
+
+
+def test_empty_scheduler_metrics_are_zero():
+    m = SlotScheduler(batch_slots=4).metrics
+    assert m.occupancy_mean == 0.0 and m.latency_mean == 0.0
+
+
+def test_reset_metrics_opens_fresh_window():
+    """A warm-up batch can be dropped from the metrics; in-flight
+    requests keep their enqueue times across the reset."""
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=2, clock=clock)
+    s.submit("warm")
+    s.refill()
+    s.record_step()
+    s.complete(0)
+    s.submit("real")  # enqueued at t=0, completes after the reset
+    s.refill()
+    s.reset_metrics()
+    assert s.metrics.steps == 0 and s.metrics.completed == 0
+    s.record_step()
+    clock.t = 2.0
+    s.complete(0)
+    m = s.metrics
+    assert m.completed == 1 and m.steps == 1
+    assert m.latency_mean == pytest.approx(2.0)  # measured from enqueue
+    assert m.occupancy_mean == pytest.approx(0.5)

@@ -1,0 +1,303 @@
+"""InferenceService on the continuous-batching scheduler.
+
+The two regression properties this file pins down:
+
+  * **batch-composition independence** — per-sample ``channel_norm``
+    makes a request's logits bit-identical whether it is served alone,
+    co-batched with arbitrary other requests, or next to zero-padded
+    dead slots (the pre-fix norm reduced over the batch axis, so logits
+    depended on who shared the batch);
+  * **one traced shape + exact statistics** — the service always
+    executes the fixed ``batch_slots`` batch, so a bursty trace traces
+    the forward exactly once, and the validity mask keeps the measured
+    skip statistics equal to a one-shot stats forward over exactly the
+    live images (dead slots excluded from counts and windows).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+from repro.engine import (
+    ClassifyRequest,
+    InferenceService,
+    SchedulerFull,
+    compile_network,
+    execute,
+    make_forward,
+)
+from repro.models.cnn import (
+    cnn_apply,
+    conv_weight_names,
+    init_cnn,
+    mini_cnn_config,
+)
+
+BACKENDS = [("xla", None), ("pallas", True)]
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, 0.7)
+    dicts = build_dictionaries(params, names, 4)
+    params, bits = project_params(params, dicts)
+    return cfg, params, bits, compile_network(cfg, params, bits)
+
+
+def _images(n, seed=5):
+    return np.array(
+        jax.random.normal(jax.random.PRNGKey(seed), (n, 1, 12, 12)),
+        np.float32,
+    )
+
+
+# ----------------------------------------------- composition independence
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_logits_invariant_to_batch_composition(mini, backend, interpret):
+    """The same image at the same batch shape yields bit-identical logits
+    regardless of what fills the other rows: other requests, different
+    other requests, or zero-padded dead slots."""
+    cfg, params, bits, prog = mini
+    fwd = make_forward(prog, backend=backend, interpret=interpret)
+    x = _images(8)
+    crowd = np.asarray(fwd(jnp.asarray(x)))
+
+    padded = np.zeros_like(x)
+    padded[0] = x[0]
+    dead = np.asarray(fwd(jnp.asarray(padded)))
+
+    other = _images(8, seed=9)
+    other[0] = x[0]
+    recrowd = np.asarray(fwd(jnp.asarray(other)))
+
+    np.testing.assert_array_equal(crowd[0], dead[0])
+    np.testing.assert_array_equal(crowd[0], recrowd[0])
+
+
+def test_dense_reference_composition_independent(mini):
+    """cnn_apply (the shared-norm reference) has the same invariance."""
+    cfg, params, bits, prog = mini
+    fwd = jax.jit(lambda xx: cnn_apply(cfg, params, xx))
+    x = _images(8)
+    crowd = np.asarray(fwd(jnp.asarray(x)))
+    padded = np.zeros_like(x)
+    padded[0] = x[0]
+    np.testing.assert_array_equal(crowd[0], np.asarray(fwd(padded))[0])
+
+
+def test_classify_alone_equals_classify_in_crowd(mini):
+    """End to end through the service: one request served by itself gets
+    bit-identical logits to the same request served inside a full batch
+    (both run at the fixed batch_slots shape)."""
+    cfg, params, bits, prog = mini
+    x = _images(8)
+    svc = InferenceService(prog, batch_slots=8, backend="xla")
+    alone = [ClassifyRequest(image=x[0])]
+    svc.serve(alone)
+    crowd = [ClassifyRequest(image=img) for img in x]
+    svc.serve(crowd)
+    np.testing.assert_array_equal(alone[0].logits, crowd[0].logits)
+    assert alone[0].label == crowd[0].label
+
+
+def test_cross_shape_difference_is_fp32_noise(mini):
+    """Different *shapes* (not compositions) may re-fuse reductions; the
+    drift must stay at fp32 noise.  The service never changes shape, so
+    this bound never reaches a served request."""
+    cfg, params, bits, prog = mini
+    x = _images(8)
+    full = np.asarray(make_forward(prog, backend="xla")(jnp.asarray(x)))
+    small = np.asarray(make_forward(prog, backend="xla")(jnp.asarray(x[:3])))
+    np.testing.assert_allclose(small, full[:3], rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_composition_independence(mini):
+    """The mesh path (1x1 mesh runs everywhere) keeps the invariance to
+    fp32 tolerance; with one device it is bit-exact."""
+    from repro.launch.mesh import make_mesh
+
+    cfg, params, bits, prog = mini
+    mesh = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    fwd = make_forward(prog, backend="xla", mesh=mesh)
+    x = _images(8)
+    crowd = np.asarray(fwd(jnp.asarray(x)))
+    padded = np.zeros_like(x)
+    padded[0] = x[0]
+    dead = np.asarray(fwd(jnp.asarray(padded)))
+    np.testing.assert_allclose(dead[0], crowd[0], rtol=1e-6, atol=1e-6)
+    if len(jax.devices()) == 1:
+        np.testing.assert_array_equal(dead[0], crowd[0])
+
+
+# ------------------------------------------------- scheduler-driven service
+
+
+def test_bursty_trace_single_trace_exact_stats(mini):
+    """A bursty 100-request trace through batch_slots=8: the forward is
+    traced exactly once, every request completes, and the accumulated
+    skip statistics equal a one-shot stats forward over the same images
+    (dead slots contribute neither counts nor windows)."""
+    cfg, params, bits, prog = mini
+    svc = InferenceService(prog, batch_slots=8, backend="xla",
+                           collect_stats=True)
+    images = _images(100, seed=3)
+    reqs = [ClassifyRequest(image=img) for img in images]
+    # bursty arrivals: uneven burst sizes interleaved with service steps,
+    # so batches run at many different occupancies
+    bursts = [1, 7, 19, 2, 30, 5, 11, 3, 22]
+    assert sum(bursts) == 100
+    it = iter(reqs)
+    for burst in bursts:
+        for _ in range(burst):
+            svc.submit(next(it))
+        svc.step()
+    svc.run()
+
+    assert all(r.done for r in reqs)
+    assert svc.trace_count() == 1
+    assert svc.batches_run >= int(np.ceil(100 / 8))
+    assert svc.metrics["completed"] == 100
+    assert 0.0 < svc.metrics["occupancy_mean"] <= 1.0
+
+    ref_logits, ref_stats = make_forward(
+        prog, backend="xla", collect_stats=True
+    )(jnp.asarray(images))
+    for name, st in ref_stats.layers.items():
+        got = svc.activation_stats.layers[name]
+        assert got.windows == st.windows
+        np.testing.assert_array_equal(got.counts, st.counts)
+    # and every request's logits are bit-identical to the one-shot rows?
+    # no — the one-shot pass runs at shape 100; the service guarantee is
+    # label/logit stability at its own fixed shape, checked to tolerance:
+    np.testing.assert_allclose(
+        np.stack([r.logits for r in reqs]), np.asarray(ref_logits),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_stats_windows_exclude_dead_slots(mini):
+    """3 requests through 8 slots: windows count 3 images, not 8, and the
+    all-zero dead rows add no (vacuously skippable) counts."""
+    cfg, params, bits, prog = mini
+    svc = InferenceService(prog, batch_slots=8, backend="xla",
+                           collect_stats=True)
+    images = _images(3, seed=11)
+    svc.serve([ClassifyRequest(image=img) for img in images])
+    assert svc.batches_run == 1
+    _, ref = make_forward(prog, backend="xla", collect_stats=True)(
+        jnp.asarray(images)
+    )
+    for name, st in ref.layers.items():
+        got = svc.activation_stats.layers[name]
+        assert got.windows == st.windows  # 3 * H * W, not 8 * H * W
+        np.testing.assert_array_equal(got.counts, st.counts)
+
+
+def test_serve_validates_all_shapes_up_front(mini):
+    """One malformed request rejects the whole serve() before any batch
+    runs: nothing is half-served."""
+    cfg, params, bits, prog = mini
+    svc = InferenceService(prog, batch_slots=4, backend="xla")
+    good = _images(5)
+    reqs = [ClassifyRequest(image=img) for img in good]
+    reqs.insert(3, ClassifyRequest(image=np.zeros((1, 5, 5), np.float32)))
+    with pytest.raises(ValueError, match="request image"):
+        svc.serve(reqs)
+    assert svc.batches_run == 0
+    assert not any(r.done for r in reqs)
+    assert not svc.scheduler.has_work()
+    # submit() validates too
+    with pytest.raises(ValueError, match="request image"):
+        svc.submit(ClassifyRequest(image=np.zeros((2, 2), np.float32)))
+
+
+def test_submit_backpressure_and_drain(mini):
+    cfg, params, bits, prog = mini
+    svc = InferenceService(prog, batch_slots=2, backend="xla", max_queue=3)
+    imgs = _images(8, seed=13)
+    for img in imgs[:3]:
+        svc.submit(ClassifyRequest(image=img))
+    with pytest.raises(SchedulerFull):
+        svc.submit(ClassifyRequest(image=imgs[3]))
+    assert svc.metrics["rejected"] == 1
+    done = svc.run()
+    assert len(done) == 3 and all(r.done for r in done)
+    # serve() interleaves submission with serving, so a one-shot batch
+    # larger than queue + slots still drains through a bounded queue —
+    # and its internal backpressure waits are not counted as rejections
+    reqs = [ClassifyRequest(image=img) for img in imgs]
+    svc.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert svc.metrics["rejected"] == 1  # only the explicit submit() above
+
+
+def test_trace_count_retraces_on_new_shape(mini):
+    cfg, params, bits, prog = mini
+    fwd = make_forward(prog, backend="xla")
+    assert fwd.trace_count() == 0
+    fwd(jnp.asarray(_images(4)))
+    fwd(jnp.asarray(_images(4, seed=7)))
+    assert fwd.trace_count() == 1  # same shape: no retrace
+    fwd(jnp.asarray(_images(2)))
+    assert fwd.trace_count() == 2  # new shape: one retrace
+
+
+# --------------------------------------------------------- execute() cache
+
+
+def test_execute_cache_capped_and_value_keyed(mini):
+    """The per-program forward cache is bounded and keys meshes by value
+    (axis names + device ids), not object identity."""
+    from repro.engine.executor import _FORWARD_CACHE_MAX
+    from repro.launch.mesh import make_mesh
+
+    cfg, params, bits, prog = mini
+    prog = compile_network(cfg, params, bits)  # fresh cache
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 12, 12))
+    for bm in (8, 16, 24, 32, 40, 48, 56, 64, 72, 80):
+        execute(prog, x, backend="xla", bm=bm)
+    cache = prog.__dict__["_forward_cache"]
+    assert len(cache) == _FORWARD_CACHE_MAX
+
+    # two equal meshes share one entry (jax may intern Mesh objects, so
+    # also check the key builder ignores object identity outright)
+    from repro.engine.executor import _dispatch_key
+
+    prog2 = compile_network(cfg, params, bits)
+    m1 = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    m2 = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    y1 = execute(prog2, x, backend="xla", mesh=m1)
+    y2 = execute(prog2, x, backend="xla", mesh=m2)
+    assert len(prog2.__dict__["_forward_cache"]) == 1
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    class _MeshView:  # same axes/devices, distinct wrapper objects
+        def __init__(self, mesh):
+            self.axis_names = tuple(mesh.axis_names)
+            self.devices = np.array(mesh.devices)
+
+    k1 = _dispatch_key("xla", None, None, _MeshView(m1), None)
+    k2 = _dispatch_key("xla", None, None, _MeshView(m1), None)
+    assert k1 == k2 and hash(k1) == hash(k2)
+
+    # LRU: re-touching an old entry keeps it alive past new insertions
+    prog3 = compile_network(cfg, params, bits)
+    for bm in (8, 16):
+        execute(prog3, x, backend="xla", bm=bm)
+    execute(prog3, x, backend="xla", bm=8)  # touch
+    for bm in (24, 32, 40, 48, 56, 64, 72):
+        execute(prog3, x, backend="xla", bm=bm)
+    keys = list(prog3.__dict__["_forward_cache"])
+    assert any(k[2] == 8 for k in keys)  # touched entry survived
+    assert not any(k[2] == 16 for k in keys)  # untouched one evicted
