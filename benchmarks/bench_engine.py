@@ -31,7 +31,13 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_engine \\
-      [--out FILE] [--quick] [--smoke]
+      [--out FILE] [--quick] [--smoke] [--trace-out FILE]
+
+``--trace-out`` additionally records the service entry on a span tracer
+(``repro.obs``) and writes a Chrome trace-event JSON — load it in
+Perfetto or chrome://tracing to see compile phases, per-layer forward
+spans, and all 100 request lifecycles on one timeline; the service
+entry then also carries the predicted-vs-measured ``drift`` section.
 
 ``--smoke`` is the CI bench-regression configuration: mini-CNN only, one
 sparsity level, a 2-device sharded entry — small enough for every PR, but
@@ -60,6 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
+from repro.obs.trace import Tracer
 from repro.core.pruning import (
     build_dictionaries,
     magnitude_prune,
@@ -221,7 +228,8 @@ SERVICE_BURSTS = (1, 7, 19, 2, 30, 5, 11, 3, 22)  # 100 requests
 SERVICE_SLOTS = 8
 
 
-def _service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
+def _service_throughput(batch_slots: int = SERVICE_SLOTS,
+                        tracer: Tracer | None = None) -> dict:
     """Requests/s of ``InferenceService`` under a bursty 100-request
     arrival trace at fixed ``batch_slots``.
 
@@ -232,12 +240,19 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
     the same images (``stats_exact``), and an ``overhead_vs_forward``
     ratio (service wall-clock per batch / bare forward wall-clock —
     machine speed cancels, so the baseline can gate it loosely).
+
+    With a ``tracer`` (``--trace-out``) the same run also lands on the
+    shared timeline: compile-phase spans, the per-request lifecycles of
+    all 100 bursty-trace requests, and — after the timed region, so the
+    throughput numbers stay clean — one instrumented per-layer forward
+    whose measured wall-times feed a non-gated predicted-vs-measured
+    ``drift`` section (``hardware_report(observed=...)``).
     """
     cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
     params, bits = _pruned(cfg, 0.75, num_patterns=8, seed=1)
-    prog = compile_network(cfg, params, bits)
+    prog = compile_network(cfg, params, bits, tracer=tracer)
     svc = InferenceService(prog, batch_slots=batch_slots, backend="xla",
-                           collect_stats=True)
+                           collect_stats=True, tracer=tracer)
     n = sum(SERVICE_BURSTS)
     images = np.array(jax.random.normal(
         jax.random.PRNGKey(3), (n, cfg.conv_channels[0][0],
@@ -280,7 +295,7 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
         for k in ref_stats.layers
     )
     m = svc.metrics
-    return {
+    entry = {
         "requests": n,
         "batch_slots": batch_slots,
         "bursts": list(SERVICE_BURSTS),
@@ -289,10 +304,23 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
         "trace_count": svc.trace_count(),
         "occupancy_mean": m["occupancy_mean"],
         "latency_mean_s": m["latency_mean_s"],
+        "latency_p50_s": m["latency_p50_s"],
+        "latency_p99_s": m["latency_p99_s"],
+        "queue_wait_mean_s": m["queue_wait_mean_s"],
         "overhead_vs_forward": (dt * 1e6 / max(batches, 1))
         / max(fwd_us, 1e-9),
         "stats_exact": stats_exact,
     }
+    if tracer is not None:
+        # outside the timed region: one eager per-layer forward for the
+        # execute-category spans, then the predicted-vs-measured drift
+        # section (timing-dependent, so never baseline-gated)
+        tfwd = make_forward(prog, backend="xla", tracer=tracer)
+        jax.block_until_ready(tfwd(jnp.asarray(images[:batch_slots])))
+        rep = prog.hardware_report(skip_stats=svc.activation_stats,
+                                   observed=tfwd.observed_times())
+        entry["drift"] = rep["drift"]
+    return entry
 
 
 # The backend must see the forced host-device count before it initializes,
@@ -401,7 +429,8 @@ def _consistency_check() -> dict:
     }
 
 
-def collect(quick: bool = False, smoke: bool = False) -> dict:
+def collect(quick: bool = False, smoke: bool = False,
+            tracer: Tracer | None = None) -> dict:
     sparsities = SPARSITIES[1:2] if (quick or smoke) else SPARSITIES
     networks = [
         _bench_network(
@@ -423,7 +452,7 @@ def collect(quick: bool = False, smoke: bool = False) -> dict:
         )
     report = {
         "networks": networks,
-        "service": _service_throughput(),
+        "service": _service_throughput(tracer=tracer),
         "sharded": _sharded_throughput(
             n_devices=2 if smoke else (4 if quick else 8)
         ),
@@ -493,8 +522,13 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI bench-regression config: mini-CNN only, one "
                          "sparsity, 2-device sharded entry")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON (Perfetto / "
+                         "chrome://tracing) of the service entry: compile "
+                         "phases, per-layer forward, request lifecycles")
     args = ap.parse_args()
-    report = collect(quick=args.quick, smoke=args.smoke)
+    tracer = Tracer() if args.trace_out else None
+    report = collect(quick=args.quick, smoke=args.smoke, tracer=tracer)
     payload = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:
@@ -502,6 +536,9 @@ def main():
         print(f"wrote {args.out}")
     else:
         print(payload)
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"wrote {args.trace_out}")
     if not report["consistency"]["per_layer_match"]:
         raise SystemExit("engine/simulator crossbar mismatch")
 

@@ -25,6 +25,14 @@ deterministic (fixed arrival trace -> exact ``batches_run`` /
 must match the one-shot forward), while its wall-clock only enters
 through the loose ``overhead_vs_forward`` ratio.
 
+With ``--trace FILE`` the Chrome trace-event artifact written by
+``bench_engine --trace-out`` is validated too: it must parse, every
+event must carry the trace-event schema fields (``ph``/``ts``/``pid``/
+``tid``/``name``, ``dur`` on complete spans), and it must contain
+compile-phase spans, per-layer executor spans, and the begin/end async
+events of all 100 bursty-trace request lifecycles.  Span *durations* are
+wall-clock and never gated — only the artifact's shape is.
+
 Exit code 0 when everything holds; 1 with a per-check report otherwise.
 Regenerate the baseline with the same ``--smoke`` run when an intentional
 change shifts the deterministic numbers.
@@ -181,6 +189,62 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
     return c
 
 
+# the smoke service entry drains the fixed 100-request bursty trace, so
+# the artifact must carry at least that many request lifecycles
+MIN_REQUEST_SPANS = 100
+
+
+def check_trace(c: Checker, path: str) -> None:
+    """Validate the shape of a ``--trace-out`` Chrome trace artifact."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        c.check(False, f"trace: {path} unreadable: {e}")
+        return
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        events = []
+    c.check(bool(events), f"trace: traceEvents missing or empty in {path}")
+    bad = []
+    for e in events:
+        ok = all(k in e for k in ("ph", "ts", "pid", "tid", "name"))
+        if ok and e["ph"] == "X":
+            ok = e.get("dur", -1) >= 0
+        if not ok:
+            bad.append(e)
+    c.check(
+        not bad,
+        f"trace: {len(bad)} events missing schema fields, first: {bad[:1]}",
+    )
+    spans = [e for e in events if e["ph"] == "X"]
+    compile_spans = [e for e in spans if e.get("cat") == "compile"]
+    c.check(
+        bool(compile_spans),
+        "trace: no compile-phase spans (ph=X, cat=compile)",
+    )
+    layer_spans = [
+        e
+        for e in spans
+        if e.get("cat") == "execute" and e["name"].startswith("layer:")
+    ]
+    c.check(
+        bool(layer_spans),
+        "trace: no per-layer executor spans (ph=X, cat=execute, layer:*)",
+    )
+    begins = [e for e in events if e["ph"] == "b" and e.get("cat") == "request"]
+    ends = [e for e in events if e["ph"] == "e" and e.get("cat") == "request"]
+    c.check(
+        len(begins) >= MIN_REQUEST_SPANS,
+        f"trace: only {len(begins)} request-lifecycle begin events "
+        f"(need >= {MIN_REQUEST_SPANS})",
+    )
+    c.check(
+        len(ends) == len(begins),
+        f"trace: {len(begins)} request begins vs {len(ends)} ends",
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh bench_engine JSON")
@@ -197,6 +261,12 @@ def main(argv=None) -> int:
         default=DEFAULT_TOP1_SLACK,
         help="allowed quantized top-1 agreement drop",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="FILE",
+        help="also validate a bench_engine --trace-out Chrome trace artifact",
+    )
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -205,6 +275,8 @@ def main(argv=None) -> int:
         baseline = json.load(f)
 
     c = compare(current, baseline, args.time_tol, args.top1_slack)
+    if args.trace:
+        check_trace(c, args.trace)
     print(f"{c.passed} checks passed, {len(c.failures)} failed")
     for msg in c.failures:
         print(f"FAIL: {msg}")

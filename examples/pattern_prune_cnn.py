@@ -3,7 +3,7 @@ simulate -> compile -> serve (the paper's full flowchart, Fig 3, CPU-sized,
 plus the deployment path).
 
   PYTHONPATH=src python examples/pattern_prune_cnn.py \\
-      [--precision {int8,fp32}] [--cell-bits N]
+      [--precision {int8,fp32}] [--cell-bits N] [--trace-out trace.json]
 
 Steps:
   1. train a small CNN on a synthetic 4-class task to ~100% accuracy,
@@ -28,6 +28,13 @@ printed as the max-abs logit delta and top-1 agreement vs the fp32
 engine on a synthetic eval batch.  ``--precision fp32`` skips step 8;
 ``--cell-bits`` varies the priced cell width without touching the stored
 int8 numbers (e.g. 2-bit cells -> 4 slices -> more area, same accuracy).
+
+``--trace-out trace.json`` records steps 5+ on a span tracer
+(``repro.obs``): compile phases, per-layer eager forward timings (which
+also feed a predicted-vs-measured drift report), and the served
+requests' lifecycles.  The script prints the top-3 slowest compile
+phases and layers, and the written file loads in Perfetto or
+chrome://tracing.
 """
 
 import argparse
@@ -64,7 +71,16 @@ ap.add_argument("--precision", choices=["int8", "fp32"], default="int8",
 ap.add_argument("--cell-bits", type=int, default=4,
                 help="RRAM cell width the int8 weights are sliced over "
                      "for hardware pricing")
+ap.add_argument("--trace-out", default=None, metavar="FILE",
+                help="write a Chrome trace-event JSON of compile/serve "
+                     "spans (open in Perfetto or chrome://tracing)")
 args = ap.parse_args()
+if args.trace_out:
+    from repro.obs import Tracer
+
+    tracer = Tracer()
+else:
+    tracer = None
 # build the quantized-compile config up front so bad flags fail in
 # milliseconds, not after the training/pruning pipeline has run
 if args.precision != "fp32":
@@ -154,7 +170,7 @@ print(f"crossbars: ours={tot_ours} naive={tot_naive} "
       f"-> area efficiency {tot_naive/max(tot_ours,1):.2f}x")
 
 # -- 5. compile into an executable crossbar program + serve ------------------
-program = compile_network(cfg, res.params, res.pattern_bits)
+program = compile_network(cfg, res.params, res.pattern_bits, tracer=tracer)
 with tempfile.TemporaryDirectory() as td:  # pay compilation once per model
     program = load_program(save_program(td + "/prog", program))
 x, y = gen_batch(jax.random.PRNGKey(123), 64)
@@ -171,7 +187,8 @@ print(f"  hardware: {rep['crossbars']} crossbars "
       f"energy {rep['energy_pj']/1e3:.1f} nJ/img, "
       f"index {rep['index_kb']:.2f} KiB")
 
-service = InferenceService(program, batch_slots=16, collect_stats=True)
+service = InferenceService(program, batch_slots=16, collect_stats=True,
+                           tracer=tracer)
 labels = service.classify(np.asarray(x))
 acc_served = float((labels == np.asarray(y)).mean())
 m = service.metrics
@@ -258,6 +275,31 @@ if args.precision != "fp32":
     print(f"  energy:   {rep_q['energy_pj']/1e3:.1f} nJ/img vs "
           f"{rep['energy_pj']/1e3:.1f} nJ/img no-skip "
           f"({rep['energy_pj']/max(rep_q['energy_pj'],1e-9):.2f}x win)")
+
+# -- observability epilogue: where the time actually went --------------------
+# The instrumented forward runs the layers eagerly, one span each, so the
+# measured wall-times can sit next to the simulator's predicted cycles
+# (hardware_report's drift section) and the slowest compile phases /
+# layers fall straight out of the collected spans.
+if tracer is not None:
+    fwd_tr = make_forward(program, tracer=tracer)
+    jax.block_until_ready(fwd_tr(x))
+    drift = program.hardware_report(observed=fwd_tr.observed_times())["drift"]
+    print(f"[{time.time()-t0:5.1f}s] predicted-vs-measured drift over "
+          f"{len(drift['layers'])} layers: "
+          f"max |share drift| {drift['max_abs_share_drift']:.1%}, "
+          f"rate spread {drift['rate_spread']:.1f}x")
+    PHASES = ("prune", "reorder", "pack", "quantize")
+    top_phases = [(n, s) for n, s in tracer.slowest(16, cat="compile")
+                  if n in PHASES][:3]
+    print("  top-3 compile phases: "
+          + ", ".join(f"{n} {s*1e3:.1f} ms" for n, s in top_phases))
+    top_layers = tracer.slowest(3, cat="execute", prefix="layer:")
+    print("  top-3 layers:         "
+          + ", ".join(f"{n.removeprefix('layer:')} {s*1e3:.1f} ms"
+                      for n, s in top_layers))
+    tracer.write(args.trace_out)
+    print(f"  wrote {args.trace_out} (open in Perfetto / chrome://tracing)")
 
 print("(full-scale VGG16 numbers: PYTHONPATH=src python -m benchmarks.run"
       " --only paper; engine bench: python -m benchmarks.bench_engine)")

@@ -42,6 +42,7 @@ __all__ = [
     "LayerResult",
     "SimulationReport",
     "SkipDistribution",
+    "drift_table",
     "simulate_layer",
     "simulate_layer_multi",
     "simulate_network",
@@ -279,6 +280,61 @@ def simulate_layer_multi(
             utilization=mapping.utilization,
         )
     return out
+
+
+def drift_table(
+    predicted_cycles: dict[str, float],
+    measured_s: dict[str, float],
+) -> dict:
+    """Predicted-vs-measured cost drift across layers.
+
+    The simulator predicts per-layer *cycles*; the instrumented executor
+    measures per-layer *seconds* — incommensurable units, so the honest
+    comparison is each layer's **share** of the network total: a perfect
+    cost model assigns every layer the same fraction of predicted cycles
+    as of measured wall time.  Per layer the table reports both shares,
+    their difference (``share_drift``, positive = the layer is more
+    expensive in reality than predicted), and the implied seconds/cycle
+    rate; the summary's ``rate_spread`` (max/min implied rate over
+    layers) is 1.0 exactly when prediction and measurement are
+    proportional, and grows with model error.  This is the trust signal
+    a mapping optimizer needs before it searches over simulator pricing.
+
+    Layers present on only one side are listed (``unmeasured`` /
+    ``unpredicted``) rather than silently dropped.
+    """
+    common = [n for n in predicted_cycles if n in measured_s]
+    tot_p = sum(float(predicted_cycles[n]) for n in common)
+    tot_m = sum(float(measured_s[n]) for n in common)
+    rows = []
+    for name in common:
+        pred = float(predicted_cycles[name])
+        meas = float(measured_s[name])
+        p_share = pred / tot_p if tot_p > 0 else 0.0
+        m_share = meas / tot_m if tot_m > 0 else 0.0
+        rows.append(
+            {
+                "name": name,
+                "predicted_cycles": pred,
+                "measured_s": meas,
+                "predicted_share": p_share,
+                "measured_share": m_share,
+                "share_drift": m_share - p_share,
+                "s_per_cycle": meas / pred if pred > 0 else None,
+            }
+        )
+    rates = [r["s_per_cycle"] for r in rows if r["s_per_cycle"]]
+    drifts = [abs(r["share_drift"]) for r in rows]
+    return {
+        "layers": rows,
+        "max_abs_share_drift": max(drifts, default=0.0),
+        "mean_abs_share_drift": (
+            sum(drifts) / len(drifts) if drifts else 0.0
+        ),
+        "rate_spread": (max(rates) / min(rates)) if rates else None,
+        "unmeasured": sorted(set(predicted_cycles) - set(measured_s)),
+        "unpredicted": sorted(set(measured_s) - set(predicted_cycles)),
+    }
 
 
 def simulate_layer(

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 __all__ = [
     "BlockPatternWeight",
     "build_block_pattern",
@@ -165,6 +167,7 @@ def build_block_pattern(
     block: int = 128,
     tile: int = 128,
     masks: np.ndarray | None = None,
+    tracer=None,
 ) -> BlockPatternWeight:
     """Pattern-prune + reorder + compress a dense [K, N] weight.
 
@@ -177,7 +180,13 @@ def build_block_pattern(
     verbatim (``num_patterns`` and ``density`` are ignored).  With
     ``nonzero_block_masks(w, block)`` this makes the build an exact
     re-layout of an already-pruned weight.
+
+    ``tracer`` (``obs/trace.py``) records the build's phases as spans —
+    ``prune`` (mask projection), ``reorder`` (column permutation),
+    ``pack`` (zero compression into bricks) — under the ``compile``
+    category; ``None`` records nothing.
     """
+    tracer = tracer or NULL_TRACER
     w = np.asarray(w, np.float32)
     k_in, n_out = w.shape
     if k_in % block or n_out % tile:
@@ -185,12 +194,13 @@ def build_block_pattern(
     nb = k_in // block
 
     if masks is None:
-        keep = max(1, int(np.ceil(density * nb)))
-        energies = (w.reshape(nb, block, n_out) ** 2).sum(1).T  # [N, nB]
-        order = np.argsort(-energies, axis=1)
-        masks = np.zeros((n_out, nb), bool)
-        np.put_along_axis(masks, order[:, :keep], True, axis=1)
-        masks = _project_masks_to_dictionary(masks, energies, num_patterns)
+        with tracer.span("prune", cat="compile", n_out=n_out, n_blocks=nb):
+            keep = max(1, int(np.ceil(density * nb)))
+            energies = (w.reshape(nb, block, n_out) ** 2).sum(1).T  # [N, nB]
+            order = np.argsort(-energies, axis=1)
+            masks = np.zeros((n_out, nb), bool)
+            np.put_along_axis(masks, order[:, :keep], True, axis=1)
+            masks = _project_masks_to_dictionary(masks, energies, num_patterns)
     else:
         masks = np.asarray(masks, bool)
         if masks.shape != (n_out, nb):
@@ -199,27 +209,30 @@ def build_block_pattern(
             )
 
     # kernel reordering: group equal masks (lexicographic by mask bytes)
-    mask_keys = np.array([m.tobytes() for m in masks])
-    new_order = np.argsort(mask_keys, kind="stable").astype(np.int32)
-    inv_order = np.argsort(new_order).astype(np.int32)
-    masks_sorted = masks[new_order]
-    w_sorted = w[:, new_order]
+    with tracer.span("reorder", cat="compile", n_out=n_out):
+        mask_keys = np.array([m.tobytes() for m in masks])
+        new_order = np.argsort(mask_keys, kind="stable").astype(np.int32)
+        inv_order = np.argsort(new_order).astype(np.int32)
+        masks_sorted = masks[new_order]
+        w_sorted = w[:, new_order]
 
-    n_tiles = n_out // tile
-    tile_masks = masks_sorted.reshape(n_tiles, tile, nb).any(axis=1)  # [T, nB]
-    nnz = tile_masks.sum(-1).astype(np.int32)
-    k_max = max(int(nnz.max()), 1)
+    with tracer.span("pack", cat="compile", n_out=n_out) as pack_span:
+        n_tiles = n_out // tile
+        tile_masks = masks_sorted.reshape(n_tiles, tile, nb).any(axis=1)
+        nnz = tile_masks.sum(-1).astype(np.int32)
+        k_max = max(int(nnz.max()), 1)
+        pack_span.args.update(n_tiles=n_tiles, k_max=k_max)
 
-    w_blocks = w_sorted.reshape(nb, block, n_tiles, tile)
-    w_comp = np.zeros((n_tiles, k_max, block, tile), np.float32)
-    block_ids = np.zeros((n_tiles, k_max), np.int32)
-    for t in range(n_tiles):
-        ids = np.nonzero(tile_masks[t])[0]
-        for j, bid in enumerate(ids):
-            # zero out the entries this tile's columns masked off
-            colmask = masks_sorted[t * tile : (t + 1) * tile, bid]  # [tile]
-            w_comp[t, j] = w_blocks[bid, :, t, :] * colmask[None, :]
-            block_ids[t, j] = bid
+        w_blocks = w_sorted.reshape(nb, block, n_tiles, tile)
+        w_comp = np.zeros((n_tiles, k_max, block, tile), np.float32)
+        block_ids = np.zeros((n_tiles, k_max), np.int32)
+        for t in range(n_tiles):
+            ids = np.nonzero(tile_masks[t])[0]
+            for j, bid in enumerate(ids):
+                # zero out the entries this tile's columns masked off
+                colmask = masks_sorted[t * tile : (t + 1) * tile, bid]
+                w_comp[t, j] = w_blocks[bid, :, t, :] * colmask[None, :]
+                block_ids[t, j] = bid
 
     dict_masks = np.unique(masks, axis=0)
     return BlockPatternWeight(

@@ -17,6 +17,36 @@ request's logits never depend on which other requests share its batch.
 ``InferenceService`` exploits that to run every batch at the fixed
 ``batch_slots`` shape — dead slots zero-padded and masked out of the
 statistics — so the forward traces exactly once for any traffic pattern.
+
+Observability
+-------------
+The whole stack is instrumented through ``repro.obs`` — pure stdlib,
+opt-in, and free when off (``tracer=None`` resolves to a shared no-op
+tracer; the jitted forward is byte-identical either way).
+
+* **Tracing.** Pass one ``obs.Tracer`` through the layers you care
+  about: ``compile_network(..., tracer=tr)`` records the lowering
+  phases (``prune -> reorder -> pack -> quantize`` under per-layer
+  ``lower:<name>`` spans), ``make_forward(..., tracer=tr)`` switches to
+  an eager per-layer instrumented forward (``layer:*`` spans with real
+  wall-times — profile with it, serve without it), and
+  ``InferenceService(..., tracer=tr)`` emits per-request async
+  lifecycles (enqueue ``b`` -> admit ``n`` -> done ``e``) plus
+  queue-depth/slot-occupancy counter tracks.  ``tr.write("trace.json")``
+  produces Chrome trace-event JSON — load it in Perfetto or
+  chrome://tracing to see compile, execute, and serve on one timeline.
+* **Predicted-vs-measured drift.** The instrumented forward's
+  ``fn.observed_times()`` (layer -> mean seconds) feeds
+  ``CompiledNetwork.hardware_report(observed=...)``, which then carries
+  a ``drift`` section comparing each layer's *share* of measured wall
+  time against its share of predicted crossbar cycles — the simulator's
+  cost model audited against the executing engine.
+* **Metrics.** ``SchedulerMetrics.snapshot()`` includes
+  histogram-backed ``latency_p50_s``/``latency_p99_s`` and the
+  queue-wait vs in-flight latency breakdown;
+  ``InferenceService.metrics_text()`` renders the same registry in
+  Prometheus text exposition for scraping.  Process-global metrics live
+  in ``repro.obs.get_registry()`` (resettable for test isolation).
 """
 
 from repro.engine.executor import execute, extract_patches, make_forward

@@ -66,6 +66,7 @@ from repro.engine.stats import (
 from repro.kernels.ops import pattern_spmm, pattern_spmm_raw
 from repro.kernels.ops import _pad_to as _pad_axis_to_mult
 from repro.models.cnn import channel_norm, max_pool_2x2
+from repro.obs.trace import Tracer
 from repro.parallel.sharding import shard_block_pattern
 
 __all__ = ["extract_patches", "make_forward", "execute"]
@@ -325,6 +326,7 @@ def make_forward(
     collect_stats: bool = False,
     mesh=None,
     partition=None,
+    tracer: Tracer | None = None,
 ):
     """Build the jitted batched forward for ``program``.
 
@@ -340,6 +342,19 @@ def make_forward(
       partition: explicit :class:`~repro.engine.partition.NetworkPartition`
         (defaults to ``program.partition``, else derived from the mesh);
         validated against the mesh's axis sizes.
+      tracer: optional span tracer (``obs/trace.py``).  With an *enabled*
+        tracer, calls run an **instrumented** layer-by-layer path: each
+        layer's dispatch is wrapped in a ``layer:<name>`` span and
+        blocked on (``block_until_ready``), so the span durations are
+        real per-layer wall times, accumulated and exposed via
+        ``fn.observed_times()`` — the measured side of
+        ``hardware_report(observed=...)``'s predicted-vs-measured drift
+        table.  The instrumented path computes the same numbers but is
+        *not* the jitted whole-forward (per-layer blocking defeats
+        op fusion across layers); use it to profile, not to serve.
+        With ``tracer=None`` (or a disabled tracer) the historical jitted
+        path runs byte-identically: no extra jit inputs, no clock reads,
+        ``fn.trace_count()`` unchanged.
 
     Returns: fn(x: [B, C, H, W], valid=None) -> logits [B, num_classes],
     or, with ``collect_stats``, fn(x, valid=None) ->
@@ -351,7 +366,9 @@ def make_forward(
     influence live logits; their own outputs are meaningless and must be
     dropped by the caller.  The returned callable exposes
     ``fn.trace_count()``, the number of times the forward has been traced
-    (a retrace means a new batch shape hit the jit cache).
+    (a retrace means a new batch shape hit the jit cache), and
+    ``fn.observed_times()``, the mean measured seconds per layer over the
+    instrumented calls so far (empty until a traced call ran).
     """
     if mesh is None:
         if partition is not None:
@@ -390,17 +407,60 @@ def make_forward(
 
     jitted = jax.jit(forward)
 
+    # per-layer wall time accumulated by the instrumented (traced) path:
+    # name -> [calls, total seconds on the tracer's clock]
+    observed: dict[str, list] = {}
+
+    def _observe(name: str, seconds: float) -> None:
+        acc = observed.setdefault(name, [0, 0.0])
+        acc[0] += 1
+        acc[1] += seconds
+
+    def instrumented(x: jax.Array, valid: jax.Array | None):
+        """Eager layer-by-layer forward: same math, spans + blocking per
+        layer so each span's duration is that layer's real wall time."""
+        with tracer.span(
+            "forward", cat="execute", batch=int(x.shape[0])
+        ) as fsp:
+            counts = {}
+            for op in program.convs:
+                with tracer.span(
+                    f"layer:{op.name}", cat="execute", op="conv"
+                ) as sp:
+                    x, cnt = _run_conv(
+                        op, x, disp, prepared[op.name],
+                        stat_masks.get(op.name), valid,
+                    )
+                    x = jax.block_until_ready(x)
+                _observe(op.name, sp.dur)
+                if cnt is not None:
+                    counts[op.name] = cnt
+            with tracer.span("layer:gap", cat="execute", op="pool"):
+                x = jax.block_until_ready(x.mean(axis=(2, 3)))
+            with tracer.span("layer:fc", cat="execute", op="fc") as sp:
+                logits = jax.block_until_ready(
+                    _run_fc(program.fc, x, disp, prepared["fc"])
+                )
+            _observe("fc", sp.dur)
+            fsp.args["layers"] = len(program.convs) + 2
+        return (logits, counts) if collect_stats else logits
+
+    def _dispatch(x, valid):
+        if tracer is not None and tracer.enabled:
+            return instrumented(x, valid)
+        return jitted(x, valid)
+
     def _as_valid(valid):
         return None if valid is None else jnp.asarray(valid, bool)
 
     if not collect_stats:
         def fn(x: jax.Array, valid=None) -> jax.Array:
-            return jitted(x, _as_valid(valid))
+            return _dispatch(x, _as_valid(valid))
     else:
         def fn(
             x: jax.Array, valid=None
         ) -> tuple[jax.Array, ActivationStats]:
-            logits, counts = jitted(x, _as_valid(valid))
+            logits, counts = _dispatch(x, _as_valid(valid))
             live = None if valid is None else int(np.asarray(valid).sum())
             stats = stats_from_counts(
                 program.convs,
@@ -410,6 +470,9 @@ def make_forward(
             return logits, stats
 
     fn.trace_count = lambda: traces["n"]
+    fn.observed_times = lambda: {
+        name: total / calls for name, (calls, total) in observed.items()
+    }
     return fn
 
 

@@ -30,6 +30,7 @@ from repro.core.sparse import (
 )
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.models.cnn import CNNConfig
+from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = ["EngineConfig", "PRECISIONS", "lower_matrix", "lower_conv",
            "lower_fc", "compile_network"]
@@ -90,20 +91,29 @@ def conv_matrix(w: np.ndarray) -> np.ndarray:
 
 
 def lower_matrix(
-    wm: np.ndarray, block: int, tile: int, precision: str = "fp32"
+    wm: np.ndarray, block: int, tile: int, precision: str = "fp32",
+    tracer: Tracer | None = None,
 ) -> BlockPatternWeight:
     """Pad a dense [K, N] matrix to (block, tile) multiples and compress it
     losslessly from its nonzero structure; ``precision='int8'`` then
-    quantizes the compressed bricks (``core/quantize.quantize_bp``)."""
+    quantizes the compressed bricks (``core/quantize.quantize_bp``).
+
+    With a ``tracer`` the lowering phases land as ``compile``-category
+    spans: ``prune`` (nonzero-structure mask discovery), ``reorder`` +
+    ``pack`` (inside ``build_block_pattern``), ``quantize``."""
     if precision not in PRECISIONS:
         raise ValueError(
             f"precision must be one of {PRECISIONS}, got {precision!r}"
         )
+    tracer = tracer or NULL_TRACER
     wp = _pad_axis(_pad_axis(np.asarray(wm, np.float32), 0, block), 1, tile)
-    masks = nonzero_block_masks(wp, block)
-    bp = build_block_pattern(wp, block=block, tile=tile, masks=masks)
+    with tracer.span("prune", cat="compile", shape=list(wp.shape)):
+        masks = nonzero_block_masks(wp, block)
+    bp = build_block_pattern(wp, block=block, tile=tile, masks=masks,
+                             tracer=tracer)
     if precision == "int8":
-        bp = quantize_bp(bp)
+        with tracer.span("quantize", cat="compile", shape=list(wp.shape)):
+            bp = quantize_bp(bp)
     return bp
 
 
@@ -115,6 +125,7 @@ def lower_conv(
     out_hw: int,
     pool_after: bool,
     ecfg: EngineConfig,
+    tracer: Tracer | None = None,
 ) -> CompiledConv:
     w = np.asarray(w, np.float32)
     c_out, c_in, kh, kw = w.shape
@@ -130,19 +141,23 @@ def lower_conv(
         out_hw=out_hw,
         pool_after=pool_after,
         bp=lower_matrix(conv_matrix(w), ecfg.block, ecfg.tile,
-                        ecfg.precision),
+                        ecfg.precision, tracer=tracer),
         bias=np.asarray(b, np.float32).copy(),
         pattern_bits=np.asarray(pattern_bits, np.int64).copy(),
     )
 
 
-def lower_fc(w: np.ndarray, b: np.ndarray, ecfg: EngineConfig) -> CompiledFC:
+def lower_fc(
+    w: np.ndarray, b: np.ndarray, ecfg: EngineConfig,
+    tracer: Tracer | None = None,
+) -> CompiledFC:
     w = np.asarray(w, np.float32)
     d_in, d_out = w.shape
     return CompiledFC(
         d_in=d_in,
         d_out=d_out,
-        bp=lower_matrix(w, ecfg.block, ecfg.tile, ecfg.precision),
+        bp=lower_matrix(w, ecfg.block, ecfg.tile, ecfg.precision,
+                        tracer=tracer),
         bias=np.asarray(b, np.float32).copy(),
     )
 
@@ -153,6 +168,7 @@ def compile_network(
     pattern_bits: dict[str, np.ndarray] | None = None,
     ecfg: EngineConfig = EngineConfig(),
     precision: str | None = None,
+    tracer: Tracer | None = None,
 ) -> CompiledNetwork:
     """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
 
@@ -164,29 +180,43 @@ def compile_network(
         structure for layers not listed.
       ecfg: spmm lowering geometry (block/tile, stored precision).
       precision: shorthand override of ``ecfg.precision`` ('fp32'/'int8').
+      tracer: optional span tracer (``obs/trace.py``).  The whole compile
+        becomes a ``compile_network`` span containing one ``lower:<name>``
+        span per layer, each wrapping its phase spans
+        (prune -> reorder -> pack -> quantize), so a Perfetto load of the
+        trace shows exactly where compile time goes.
     """
     if precision is not None:
         ecfg = dataclasses.replace(ecfg, precision=precision)
+    tracer = tracer or NULL_TRACER
     pattern_bits = pattern_bits or {}
     convs = []
     hw = cfg.input_hw
-    for i in range(1, cfg.num_convs + 1):
-        name = f"conv{i}"
-        pool = i in cfg.pool_after
-        convs.append(
-            lower_conv(
-                name,
-                params[name]["w"],
-                params[name]["b"],
-                pattern_bits.get(name),
-                out_hw=hw,
-                pool_after=pool,
-                ecfg=ecfg,
-            )
-        )
-        if pool:
-            hw //= 2
-    fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg)
+    with tracer.span(
+        "compile_network", cat="compile",
+        layers=cfg.num_convs + 1, precision=ecfg.precision,
+    ):
+        for i in range(1, cfg.num_convs + 1):
+            name = f"conv{i}"
+            pool = i in cfg.pool_after
+            with tracer.span(f"lower:{name}", cat="compile"):
+                convs.append(
+                    lower_conv(
+                        name,
+                        params[name]["w"],
+                        params[name]["b"],
+                        pattern_bits.get(name),
+                        out_hw=hw,
+                        pool_after=pool,
+                        ecfg=ecfg,
+                        tracer=tracer,
+                    )
+                )
+            if pool:
+                hw //= 2
+        with tracer.span("lower:fc", cat="compile"):
+            fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg,
+                          tracer=tracer)
     return CompiledNetwork(
         config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile,
         precision=ecfg.precision, cell_bits=ecfg.cell_bits,

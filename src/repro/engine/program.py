@@ -22,7 +22,7 @@ from repro.core.crossbar import EnergyModel
 from repro.core.mapping import CrossbarConfig
 from repro.core.quantize import WEIGHT_BITS, n_cell_slices
 from repro.core.patterns import PatternDict
-from repro.core.simulator import simulate_layer_multi
+from repro.core.simulator import drift_table, simulate_layer_multi
 from repro.core.sparse import BlockPatternWeight, block_density
 from repro.core.synthetic import LayerSpec, SyntheticLayer
 from repro.engine.partition import NetworkPartition, tile_assignment
@@ -223,6 +223,7 @@ class CompiledNetwork:
         skip_stats=None,
         assumed_skip: float | None = None,
         n_chips: int | None = None,
+        observed: dict[str, float] | None = None,
     ) -> dict:
         """Price the compiled convs on the paper's crossbar model.
 
@@ -252,6 +253,17 @@ class CompiledNetwork:
         section's ``measured_layers`` lists which layers were actually
         observed, and per-layer rows only carry ``energy_pj_measured``
         when that layer was.
+
+        ``observed`` maps layer names to *measured* per-layer seconds —
+        the ``fn.observed_times()`` of a tracer-instrumented
+        ``make_forward`` — and adds a ``drift`` section
+        (``core/simulator.drift_table``): each layer's share of total
+        predicted cycles vs its share of measured wall time, the
+        per-layer drift between the two, and the implied
+        seconds-per-cycle spread.  Predicted cycles use the
+        measured-skip pricing when ``skip_stats`` is also given (so both
+        sides of the comparison describe the same served traffic), else
+        the no-skip bound.
 
         ``n_chips`` adds a ``chips`` section splitting crossbar area /
         energy / cycles over that many tile-parallel devices; with
@@ -374,6 +386,16 @@ class CompiledNetwork:
                 else (e_measured - e_assumed) / max(e_assumed, 1e-9)
             ),
         }
+        if observed:
+            # predicted cycles per layer: measured-skip priced when skip
+            # statistics exist for the layer, else the no-skip bound
+            predicted = {}
+            for i, r in enumerate(layers):
+                src = measured[i] if self.convs[i].name in dists else r
+                predicted[r.name] = src.ours_cycles
+            rep["drift"] = drift_table(
+                predicted, {k: float(v) for k, v in observed.items()}
+            )
         if n_chips is not None:
             rep["chips"] = self._chips_view(layers, int(n_chips), 1)
         elif self.partition is not None:

@@ -14,14 +14,15 @@ each reimplementing (and subtly breaking) queue/slot bookkeeping:
   * **continuous refill**: :meth:`refill` admits queued requests into
     free slots the moment they free up — mid-flight for workloads whose
     requests finish at different times, per batch for one-shot workloads,
-  * **metrics**: per-request enqueue->done latency and per-step slot
-    occupancy (:class:`SchedulerMetrics`), measured against an injectable
-    monotonic ``clock`` so tests can pin time.
-
-The scheduler is deliberately execution-agnostic: it never touches
-arrays.  The caller owns the batch buffer, writes admitted payloads into
-the slots :meth:`refill` hands out, runs its jitted step, and reports
-completions back via :meth:`complete`.
+  * **metrics**: per-request enqueue->done latency — histogram-backed, so
+    :meth:`SchedulerMetrics.snapshot` carries exact p50/p99 next to the
+    mean, split into queue wait (enqueue->admit) vs in-flight
+    (admit->done) — and per-step slot occupancy, measured against an
+    injectable monotonic ``clock`` so tests can pin time,
+  * **tracing**: given a :class:`~repro.obs.trace.Tracer`, every request
+    becomes an async span (enqueue -> admit -> done) and queue depth /
+    live slots become counter tracks, landing request lifecycles on the
+    same Perfetto timeline as compile phases and layer execution.
 """
 
 from __future__ import annotations
@@ -33,6 +34,9 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs.metrics import LATENCY_BUCKETS_S, Histogram
+from repro.obs.trace import NULL_TRACER, Tracer
+
 __all__ = ["SchedulerFull", "SchedulerMetrics", "SlotScheduler"]
 
 
@@ -41,23 +45,40 @@ class SchedulerFull(RuntimeError):
     full — the backpressure signal a front end turns into HTTP 429/503."""
 
 
+def _latency_hist() -> Histogram:
+    return Histogram(buckets=LATENCY_BUCKETS_S)
+
+
 @dataclasses.dataclass
 class SchedulerMetrics:
     """Counters the scheduler accumulates while serving.
 
     ``occupancy_sum`` adds the live-slot count once per recorded step, so
     ``occupancy_mean`` is the average fraction of the fixed batch shape
-    doing useful work; latencies are enqueue->done wall-clock seconds.
+    doing useful work.  Latencies are enqueue->done wall-clock seconds,
+    recorded into an exact-percentile histogram
+    (``obs/metrics.Histogram``) and broken down into queue wait
+    (enqueue->admit, recorded at admission over ``admitted`` requests)
+    vs in-flight time (admit->done, recorded at completion).
     """
 
     batch_slots: int
     enqueued: int = 0
+    admitted: int = 0
     completed: int = 0
     rejected: int = 0
     steps: int = 0
     occupancy_sum: int = 0
     latency_sum: float = 0.0
     latency_max: float = 0.0
+    queue_wait_sum: float = 0.0
+    in_flight_sum: float = 0.0
+    latency_hist: Histogram = dataclasses.field(
+        default_factory=_latency_hist, repr=False, compare=False
+    )
+    queue_wait_hist: Histogram = dataclasses.field(
+        default_factory=_latency_hist, repr=False, compare=False
+    )
 
     @property
     def occupancy_mean(self) -> float:
@@ -72,17 +93,78 @@ class SchedulerMetrics:
             return 0.0
         return self.latency_sum / self.completed
 
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_hist.percentile(50)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_hist.percentile(99)
+
+    @property
+    def queue_wait_mean(self) -> float:
+        if self.admitted == 0:
+            return 0.0
+        return self.queue_wait_sum / self.admitted
+
+    @property
+    def in_flight_mean(self) -> float:
+        if self.completed == 0:
+            return 0.0
+        return self.in_flight_sum / self.completed
+
+    def record_admit(self, queue_wait: float) -> None:
+        self.admitted += 1
+        self.queue_wait_sum += queue_wait
+        self.queue_wait_hist.observe(queue_wait)
+
+    def record_complete(self, latency: float, in_flight: float) -> None:
+        self.completed += 1
+        self.latency_sum += latency
+        self.latency_max = max(self.latency_max, latency)
+        self.latency_hist.observe(latency)
+        self.in_flight_sum += in_flight
+
     def snapshot(self) -> dict:
         return {
             "batch_slots": self.batch_slots,
             "enqueued": self.enqueued,
+            "admitted": self.admitted,
             "completed": self.completed,
             "rejected": self.rejected,
             "steps": self.steps,
             "occupancy_mean": self.occupancy_mean,
             "latency_mean_s": self.latency_mean,
             "latency_max_s": self.latency_max,
+            "latency_p50_s": self.latency_p50,
+            "latency_p99_s": self.latency_p99,
+            "queue_wait_mean_s": self.queue_wait_mean,
+            "queue_wait_p99_s": self.queue_wait_hist.percentile(99),
+            "in_flight_mean_s": self.in_flight_mean,
         }
+
+    def to_prometheus(self, prefix: str = "scheduler") -> str:
+        """Prometheus text exposition of the current window — what an RPC
+        front end returns from its ``/metrics`` endpoint."""
+        lines = []
+        scalars = {
+            "batch_slots": ("gauge", self.batch_slots),
+            "enqueued_total": ("counter", self.enqueued),
+            "admitted_total": ("counter", self.admitted),
+            "completed_total": ("counter", self.completed),
+            "rejected_total": ("counter", self.rejected),
+            "steps_total": ("counter", self.steps),
+            "occupancy_mean": ("gauge", self.occupancy_mean),
+        }
+        for name, (kind, value) in scalars.items():
+            full = f"{prefix}_{name}"
+            lines.append(f"# TYPE {full} {kind}")
+            lines.append(f"{full} {value}")
+        lines.extend(self.latency_hist.prom_lines(f"{prefix}_latency_seconds"))
+        lines.extend(
+            self.queue_wait_hist.prom_lines(f"{prefix}_queue_wait_seconds")
+        )
+        return "\n".join(lines) + "\n"
 
 
 class SlotScheduler:
@@ -95,6 +177,10 @@ class SlotScheduler:
         ``False``) — requests already admitted to slots don't count.
       clock: monotonic time source for latency metrics (injectable so
         tests are deterministic).
+      tracer: optional span tracer; each request becomes an async
+        "request" span from enqueue to completion with an admission
+        instant, and queue depth / live slots are emitted as counter
+        tracks.  ``None`` resolves to the shared no-op tracer.
     """
 
     def __init__(
@@ -102,6 +188,7 @@ class SlotScheduler:
         batch_slots: int,
         max_queue: int = 0,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Tracer | None = None,
     ):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
@@ -110,9 +197,13 @@ class SlotScheduler:
         self.batch_slots = batch_slots
         self.max_queue = max_queue
         self._clock = clock
-        self._queue: deque[tuple[Any, float]] = deque()
+        self._tracer = tracer or NULL_TRACER
+        self._queue: deque[tuple[Any, float, int]] = deque()
         self._slots: list[Any | None] = [None] * batch_slots
         self._enq_time: list[float] = [0.0] * batch_slots
+        self._admit_time: list[float] = [0.0] * batch_slots
+        self._slot_rid: list[int] = [0] * batch_slots
+        self._rid_seq = 0  # request-id sequence for the trace's async spans
         self.metrics = SchedulerMetrics(batch_slots=batch_slots)
 
     # ------------------------------------------------------------- admission
@@ -126,9 +217,14 @@ class SlotScheduler:
         """Enqueue ``item``; ``False`` (and a rejected tick) when full."""
         if not self.has_capacity():
             self.metrics.rejected += 1
+            self._tracer.instant("request_rejected", cat="request")
             return False
-        self._queue.append((item, self._clock()))
+        self._rid_seq += 1
+        rid = self._rid_seq
+        self._queue.append((item, self._clock(), rid))
         self.metrics.enqueued += 1
+        self._tracer.async_begin("request", rid, cat="request")
+        self._emit_counters()
         return True
 
     def submit(self, item: Any) -> None:
@@ -147,10 +243,19 @@ class SlotScheduler:
         admitted = []
         for i in range(self.batch_slots):
             if self._slots[i] is None and self._queue:
-                item, t_enq = self._queue.popleft()
+                item, t_enq, rid = self._queue.popleft()
+                now = self._clock()
                 self._slots[i] = item
                 self._enq_time[i] = t_enq
+                self._admit_time[i] = now
+                self._slot_rid[i] = rid
+                self.metrics.record_admit(max(now - t_enq, 0.0))
+                self._tracer.async_instant(
+                    "request", rid, cat="request", event="admit", slot=i
+                )
                 admitted.append((i, item))
+        if admitted:
+            self._emit_counters()
         return admitted
 
     # ------------------------------------------------------------- occupancy
@@ -169,9 +274,16 @@ class SlotScheduler:
     def reset_metrics(self) -> None:
         """Start a fresh metrics window (e.g. after a warm-up batch).
 
-        In-flight requests keep their original enqueue times, so their
-        latencies land in the new window when they complete.
+        In-flight requests are *re-anchored* to the reset instant: their
+        enqueue/admit timestamps become "now", so when they eventually
+        complete they contribute only their post-reset time to the fresh
+        window instead of dragging pre-reset wait in with them.
         """
+        now = self._clock()
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                self._enq_time[i] = now
+                self._admit_time[i] = now
         self.metrics = SchedulerMetrics(batch_slots=self.batch_slots)
 
     def has_work(self) -> bool:
@@ -182,9 +294,9 @@ class SlotScheduler:
     def record_step(self) -> None:
         """Account one executed batch step at the current occupancy."""
         self.metrics.steps += 1
-        self.metrics.occupancy_sum += sum(
-            1 for s in self._slots if s is not None
-        )
+        live = sum(1 for s in self._slots if s is not None)
+        self.metrics.occupancy_sum += live
+        self._tracer.counter("scheduler/slots_live", live=live)
 
     def complete(self, slot: int) -> Any:
         """Free ``slot``, record its request's latency, return the item."""
@@ -192,8 +304,20 @@ class SlotScheduler:
         if item is None:
             raise ValueError(f"slot {slot} is not occupied")
         self._slots[slot] = None
-        latency = max(self._clock() - self._enq_time[slot], 0.0)
-        self.metrics.completed += 1
-        self.metrics.latency_sum += latency
-        self.metrics.latency_max = max(self.metrics.latency_max, latency)
+        now = self._clock()
+        latency = max(now - self._enq_time[slot], 0.0)
+        in_flight = max(now - self._admit_time[slot], 0.0)
+        self.metrics.record_complete(latency, in_flight)
+        self._tracer.async_end("request", self._slot_rid[slot], cat="request")
+        self._emit_counters()
         return item
+
+    def _emit_counters(self) -> None:
+        t = self._tracer
+        if not t.enabled:
+            return
+        t.counter("scheduler/queue_depth", queued=len(self._queue))
+        t.counter(
+            "scheduler/slots_live",
+            live=sum(1 for s in self._slots if s is not None),
+        )

@@ -36,6 +36,7 @@ from repro.engine.executor import make_forward
 from repro.engine.program import CompiledNetwork
 from repro.engine.scheduler import SlotScheduler
 from repro.engine.stats import ActivationStats
+from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = ["ClassifyRequest", "InferenceService"]
 
@@ -64,6 +65,7 @@ class InferenceService:
         partition=None,
         max_queue: int = 0,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Tracer | None = None,
     ):
         """With ``mesh=`` every batch executes sharded
         (``engine/partition.py``): batch slots split over the mesh's data
@@ -77,6 +79,14 @@ class InferenceService:
         unbounded); a full queue raises
         :class:`~repro.engine.scheduler.SchedulerFull` from
         :meth:`submit` — the backpressure signal under load.
+
+        ``tracer`` puts the service on a shared Perfetto timeline: every
+        request becomes an async span (enqueue -> admit -> done, via the
+        scheduler), each executed batch a ``service.step`` span, and
+        queue depth / live slots counter tracks.  The tracer is *not*
+        handed to the jitted forward — serving always runs the
+        single-trace jitted path; use a separate tracer-instrumented
+        ``make_forward`` for per-layer timings.
         """
         self.program = program
         self.batch_slots = batch_slots
@@ -86,8 +96,9 @@ class InferenceService:
             program, backend=backend, interpret=interpret,
             collect_stats=collect_stats, mesh=mesh, partition=partition,
         )
+        self._tracer = tracer or NULL_TRACER
         self.scheduler = SlotScheduler(
-            batch_slots, max_queue=max_queue, clock=clock
+            batch_slots, max_queue=max_queue, clock=clock, tracer=tracer
         )
         shape = self._input_shape()
         # persistent slot buffer: freed slots are zeroed, so the fixed
@@ -148,11 +159,15 @@ class InferenceService:
         valid = sched.valid_mask()
         if not valid.any():
             return []
-        out = self._forward(jnp.asarray(self._slots_x), valid)
-        if self.collect_stats:
-            out, stats = out
-            self._record_stats(stats)
-        logits = np.asarray(jax.device_get(out))
+        with self._tracer.span(
+            "service.step", cat="serve", live=int(valid.sum()),
+            batch_slots=self.batch_slots,
+        ):
+            out = self._forward(jnp.asarray(self._slots_x), valid)
+            if self.collect_stats:
+                out, stats = out
+                self._record_stats(stats)
+            logits = np.asarray(jax.device_get(out))
         self.batches_run += 1
         sched.record_step()
         finished = []
@@ -198,6 +213,11 @@ class InferenceService:
         reqs = [ClassifyRequest(image=img) for img in np.asarray(images)]
         self.serve(reqs)
         return np.array([r.label for r in reqs], np.int64)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the scheduler metrics — what an
+        RPC front end serves from its ``/metrics`` endpoint."""
+        return self.scheduler.metrics.to_prometheus(prefix="engine_service")
 
     def hardware_report(self, assumed_skip: float | None = None, **kw) -> dict:
         """Crossbar pricing from the skip statistics of the served traffic.

@@ -1,0 +1,44 @@
+"""Unified observability substrate: spans + metrics, dependency-free.
+
+Two pillars, both pure stdlib (no jax, no numpy) so every layer of the
+stack — compiler, executor, scheduler, serving front ends — can depend
+on them without import cycles or accelerator-backend coupling:
+
+  * ``trace`` — a thread-safe span tracer with an injectable monotonic
+    clock and a bounded ring buffer, exporting Chrome trace-event JSON
+    (complete/instant/async/counter events) loadable in Perfetto or
+    ``chrome://tracing``.  One :class:`~repro.obs.trace.Tracer` threaded
+    through ``compile_network`` -> ``make_forward`` ->
+    ``InferenceService`` puts compile phases, per-layer execution, and
+    request lifecycles on a single shared timeline.
+  * ``metrics`` — counters, gauges, and fixed-bucket histograms with
+    exact sample-backed percentiles, grouped in a process-global but
+    resettable :class:`~repro.obs.metrics.MetricsRegistry`, with JSON
+    snapshot and Prometheus text exposition.
+
+Everything is opt-in: a ``tracer=None`` default everywhere resolves to
+the shared no-op :data:`~repro.obs.trace.NULL_TRACER`, so un-traced hot
+paths (in particular the jitted forward) are byte-identical to the
+pre-observability code.
+"""
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+)
+from repro.obs.trace import NULL_TRACER, Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "NULL_TRACER",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+]

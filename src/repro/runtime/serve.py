@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.engine.scheduler import SlotScheduler
 from repro.models.transformer import ModelConfig, apply_model, init_cache
+from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_decode_step", "ServeLoop"]
 
@@ -101,18 +102,22 @@ class ServeLoop:
     admission is not mid-decode.
     """
 
-    def __init__(self, cfg: ModelConfig, statics, params, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, statics, params, scfg: ServeConfig,
+                 tracer: Tracer | None = None):
         self.cfg, self.statics, self.scfg = cfg, statics, scfg
         self.params = params
         self.prefill = jax.jit(make_prefill_step(cfg, statics, scfg))
         self.decode = jax.jit(
             make_decode_step(cfg, statics, scfg), donate_argnums=(1,)
         )
+        # request lifecycles + per-generation prefill/decode spans land on
+        # the same timeline as everything else holding this tracer
+        self.tracer = tracer or NULL_TRACER
         self.metrics: dict | None = None
 
     def generate(self, requests: list[Request]) -> list[Request]:
         scfg = self.scfg
-        sched = SlotScheduler(scfg.batch_slots)
+        sched = SlotScheduler(scfg.batch_slots, tracer=self.tracer)
         for r in requests:
             sched.submit(r)
         # all prompts in this miniature loop share a length per batch; pad
@@ -128,10 +133,13 @@ class ServeLoop:
             prompts = np.zeros((scfg.batch_slots, maxlen), np.int32)
             for slot, r in admitted:
                 prompts[slot, -r.prompt.size :] = r.prompt  # left-pad
-            tok, caches = self.prefill(
-                self.params, caches, jnp.asarray(prompts)
-            )
-            tok_np = np.asarray(jax.device_get(tok))
+            with self.tracer.span(
+                "serve.prefill", cat="serve", batch=len(admitted), len=maxlen
+            ):
+                tok, caches = self.prefill(
+                    self.params, caches, jnp.asarray(prompts)
+                )
+                tok_np = np.asarray(jax.device_get(tok))
             for slot, r in admitted:
                 r.output.append(int(tok_np[slot]))
             sched.record_step()
@@ -140,10 +148,12 @@ class ServeLoop:
             for _ in range(max(budget, 0)):
                 if pos >= scfg.max_seq:
                     break
-                tok, caches = self.decode(
-                    self.params, caches, jnp.asarray(tok_np), jnp.int32(pos)
-                )
-                tok_np = np.asarray(jax.device_get(tok))
+                with self.tracer.span("serve.decode", cat="serve", pos=pos):
+                    tok, caches = self.decode(
+                        self.params, caches, jnp.asarray(tok_np),
+                        jnp.int32(pos),
+                    )
+                    tok_np = np.asarray(jax.device_get(tok))
                 for slot, r in admitted:
                     if not r.done and len(r.output) < r.max_new_tokens:
                         t = int(tok_np[slot])

@@ -103,7 +103,8 @@ def test_empty_scheduler_metrics_are_zero():
 
 def test_reset_metrics_opens_fresh_window():
     """A warm-up batch can be dropped from the metrics; in-flight
-    requests keep their enqueue times across the reset."""
+    requests are re-anchored to the reset instant (here the reset
+    happens at the enqueue time, so the measured latency is unchanged)."""
     clock = FakeClock()
     s = SlotScheduler(batch_slots=2, clock=clock)
     s.submit("warm")
@@ -121,3 +122,97 @@ def test_reset_metrics_opens_fresh_window():
     assert m.completed == 1 and m.steps == 1
     assert m.latency_mean == pytest.approx(2.0)  # measured from enqueue
     assert m.occupancy_mean == pytest.approx(0.5)
+
+
+def test_reset_metrics_reanchors_in_flight_requests():
+    """Regression: reset_metrics used to leave live slots' enqueue
+    timestamps pointing into the previous window, so a request admitted
+    long before the reset polluted the fresh window with its whole
+    pre-reset wait.  Live entries are re-anchored to the reset instant."""
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=1, clock=clock)
+    s.submit("r")  # enqueued at t=0
+    s.refill()
+    clock.t = 5.0
+    s.reset_metrics()  # request has been in flight for 5s already
+    clock.t = 6.0
+    s.complete(0)
+    m = s.metrics
+    # only the post-reset second lands in the fresh window, not 6.0
+    assert m.latency_mean == pytest.approx(1.0)
+    assert m.latency_max == pytest.approx(1.0)
+    assert m.in_flight_mean == pytest.approx(1.0)
+    assert m.latency_hist.count == 1
+
+
+def test_latency_percentiles_and_wait_breakdown():
+    """Histogram-backed p50/p99 are exact, and enqueue->done splits into
+    queue wait (enqueue->admit) plus in-flight (admit->done)."""
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=1, clock=clock)
+    # request i: enqueued at t, admitted 1s later, completes i s after
+    for i in range(1, 101):
+        t0 = clock.t
+        s.submit(i)
+        clock.t = t0 + 1.0
+        s.refill()
+        clock.t = t0 + 1.0 + float(i)
+        s.complete(0)
+    m = s.metrics
+    assert m.latency_p50 == pytest.approx(51.0)  # 1 + 50
+    assert m.latency_p99 == pytest.approx(100.0)  # 1 + 99
+    assert m.queue_wait_mean == pytest.approx(1.0)
+    assert m.in_flight_mean == pytest.approx(50.5)
+    assert m.latency_mean == pytest.approx(
+        m.queue_wait_mean + m.in_flight_mean
+    )
+    snap = m.snapshot()
+    assert snap["latency_p50_s"] == pytest.approx(51.0)
+    assert snap["latency_p99_s"] == pytest.approx(100.0)
+    assert snap["queue_wait_mean_s"] == pytest.approx(1.0)
+    assert snap["queue_wait_p99_s"] == pytest.approx(1.0)
+    assert snap["in_flight_mean_s"] == pytest.approx(50.5)
+    assert snap["admitted"] == 100
+    text = m.to_prometheus(prefix="test_sched")
+    assert "test_sched_completed_total 100" in text
+    assert "test_sched_latency_seconds_count 100" in text
+
+
+def test_scheduler_emits_request_lifecycle_spans():
+    """With a tracer, each request becomes an async begin/admit/end trio
+    and queue depth / live slots land as counter tracks."""
+    from repro.obs.trace import Tracer
+
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    s = SlotScheduler(batch_slots=2, max_queue=2, clock=clock, tracer=tr)
+    s.submit("a")
+    s.submit("b")
+    assert not s.try_submit("c")  # rejected: instant event, no lifecycle
+    s.refill()
+    s.record_step()
+    clock.t = 1.0
+    s.complete(0)
+    s.complete(1)
+    ev = tr.events()
+    begins = [e for e in ev if e["ph"] == "b" and e["cat"] == "request"]
+    admits = [e for e in ev if e["ph"] == "n" and e["cat"] == "request"]
+    ends = [e for e in ev if e["ph"] == "e" and e["cat"] == "request"]
+    assert len(begins) == len(admits) == len(ends) == 2
+    # lifecycles are keyed so Perfetto can pair them up
+    assert {e["id"] for e in begins} == {e["id"] for e in ends}
+    assert [e["args"]["slot"] for e in admits] == [0, 1]
+    assert any(e["ph"] == "i" and e["name"] == "request_rejected"
+               for e in ev)
+    counters = [e for e in ev if e["ph"] == "C"]
+    assert {"scheduler/queue_depth", "scheduler/slots_live"} <= {
+        e["name"] for e in counters
+    }
+    # untraced schedulers pay nothing: the shared no-op tracer records 0
+    s2 = SlotScheduler(batch_slots=1, clock=clock)
+    s2.submit("x")
+    s2.refill()
+    s2.complete(0)
+    from repro.obs.trace import NULL_TRACER
+
+    assert NULL_TRACER.events() == []

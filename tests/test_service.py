@@ -253,6 +253,108 @@ def test_trace_count_retraces_on_new_shape(mini):
     assert fwd.trace_count() == 2  # new shape: one retrace
 
 
+# ------------------------------------------------------------ observability
+
+
+def test_traced_service_keeps_single_trace_and_emits_lifecycles(mini):
+    """Tracing is host-side only: a traced service still hits exactly one
+    jitted trace, while every request lands as an async lifecycle and
+    each executed batch as a serve-category step span."""
+    from repro.obs import Tracer
+
+    cfg, params, bits, prog = mini
+    tr = Tracer()
+    svc = InferenceService(prog, batch_slots=4, backend="xla",
+                           collect_stats=True, tracer=tr)
+    images = _images(10, seed=21)
+    reqs = [ClassifyRequest(image=img) for img in images]
+    svc.serve(reqs)
+    assert svc.trace_count() == 1
+    assert all(r.done for r in reqs)
+    ev = tr.events()
+    begins = [e for e in ev if e["ph"] == "b" and e["cat"] == "request"]
+    ends = [e for e in ev if e["ph"] == "e" and e["cat"] == "request"]
+    assert len(begins) == 10 and len(ends) == 10
+    steps = [e for e in ev
+             if e["ph"] == "X" and e["name"] == "service.step"]
+    assert len(steps) == svc.batches_run
+    assert all(e["cat"] == "serve" for e in steps)
+    # an untraced service's logits are bit-identical: same forward path
+    svc2 = InferenceService(prog, batch_slots=4, backend="xla")
+    reqs2 = [ClassifyRequest(image=img) for img in images]
+    svc2.serve(reqs2)
+    np.testing.assert_array_equal(
+        np.stack([r.logits for r in reqs]),
+        np.stack([r.logits for r in reqs2]),
+    )
+    # Prometheus text exposition comes straight off the scheduler metrics
+    text = svc.metrics_text()
+    assert "engine_service_completed_total 10" in text
+    assert "engine_service_latency_seconds_count 10" in text
+
+
+def test_instrumented_forward_matches_and_reports_drift(mini):
+    """The per-layer instrumented forward computes the same logits as the
+    jitted path, exposes per-layer mean wall-times, and those feed the
+    hardware report's predicted-vs-measured drift section."""
+    from repro.obs import Tracer
+
+    cfg, params, bits, prog = mini
+    x = jnp.asarray(_images(4, seed=2))
+    plain = make_forward(prog, backend="xla")
+    tr = Tracer()
+    traced = make_forward(prog, backend="xla", tracer=tr)
+    np.testing.assert_allclose(
+        np.asarray(traced(x)), np.asarray(plain(x)), rtol=1e-5, atol=1e-6
+    )
+    # the instrumented path never touched the jitted function
+    assert traced.trace_count() == 0
+    times = traced.observed_times()
+    layer_names = [c.name for c in prog.convs] + ["fc"]
+    assert set(times) == set(layer_names)
+    assert all(v > 0 for v in times.values())
+    spans = [s.name for s in tr.spans("execute")]
+    assert "forward" in spans
+    assert {f"layer:{c.name}" for c in prog.convs} <= set(spans)
+
+    rep = prog.hardware_report(observed=times)
+    drift = rep["drift"]
+    rows = {r["name"]: r for r in drift["layers"]}
+    assert set(rows) == {c.name for c in prog.convs}  # fc: no cycle model
+    assert drift["unpredicted"] == ["fc"]
+    for r in rows.values():
+        assert r["share_drift"] == pytest.approx(
+            r["measured_share"] - r["predicted_share"]
+        )
+    # shares each sum to 1 over the compared layers
+    assert sum(r["predicted_share"] for r in rows.values()) == (
+        pytest.approx(1.0)
+    )
+    assert sum(r["measured_share"] for r in rows.values()) == (
+        pytest.approx(1.0)
+    )
+    assert drift["rate_spread"] >= 1.0
+    # no observations -> no drift section
+    assert "drift" not in prog.hardware_report()
+
+
+def test_compile_tracer_records_phases_without_changing_output(mini):
+    from repro.obs import Tracer
+
+    cfg, params, bits, prog = mini
+    tr = Tracer()
+    prog_tr = compile_network(cfg, params, bits, tracer=tr)
+    names = [s.name for s in tr.spans("compile")]
+    assert "compile_network" in names
+    assert {"prune", "reorder", "pack"} <= set(names)
+    assert {f"lower:{c.name}" for c in prog.convs} <= set(names)
+    x = jnp.asarray(_images(2, seed=1))
+    np.testing.assert_array_equal(
+        np.asarray(make_forward(prog_tr, backend="xla")(x)),
+        np.asarray(make_forward(prog, backend="xla")(x)),
+    )
+
+
 # --------------------------------------------------------- execute() cache
 
 
