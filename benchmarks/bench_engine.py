@@ -396,8 +396,10 @@ def _sharded_throughput(n_devices: int = 4, batch: int = 8,
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def _consistency_check() -> dict:
-    """Engine hardware_report vs simulate_dataset on identical bits."""
+def _synthetic_vgg():
+    """(cfg, params, bits) for the synthetic cifar10 VGG — the largest
+    network the bench compiles, shared by the consistency and verify
+    entries."""
     stats, layers = synthesize_network("cifar10", seed=0)
     cfg = vgg16_config(num_classes=10, input_hw=stats.input_hw)
     params = {}
@@ -416,6 +418,12 @@ def _consistency_check() -> dict:
         "w": jnp.zeros((c_last, cfg.num_classes), jnp.float32),
         "b": jnp.zeros((cfg.num_classes,), jnp.float32),
     }
+    return cfg, params, bits
+
+
+def _consistency_check() -> dict:
+    """Engine hardware_report vs simulate_dataset on identical bits."""
+    cfg, params, bits = _synthetic_vgg()
     prog = compile_network(cfg, params, bits)
     rep = prog.hardware_report()
     sim = simulate_dataset("cifar10", seed=0)
@@ -426,6 +434,43 @@ def _consistency_check() -> dict:
         "engine_crossbars": int(sum(engine_per_layer)),
         "simulator_crossbars": int(sum(sim_per_layer)),
         "per_layer_match": engine_per_layer == sim_per_layer,
+    }
+
+
+def _verify_overhead() -> dict:
+    """Static-verifier cost relative to compile on the synthetic VGG.
+
+    Both stored precisions are compiled and verified; compile and verify
+    wall-times are summed so the ratio reflects the real cost of leaving
+    ``verify`` on at every trust boundary.  ``check_baseline.py`` gates
+    ``overhead_frac`` at < 10% of compile time and requires
+    ``errors == 0`` — every program this bench compiles must pass.
+    """
+    from repro.analysis.verify import verify_network
+
+    cfg, params, bits = _synthetic_vgg()
+    compile_s = verify_s = 0.0
+    errors = warnings_ = 0
+    for precision in ("fp32", "int8"):
+        t0 = time.perf_counter()
+        prog = compile_network(cfg, params, bits, precision=precision)
+        compile_s += time.perf_counter() - t0
+        # verification is deterministic; best-of-2 removes timer noise
+        # from the ratio gate
+        times = []
+        for _ in range(2):
+            t0 = time.perf_counter()
+            report = verify_network(prog)
+            times.append(time.perf_counter() - t0)
+        verify_s += min(times)
+        errors += len(report.errors)
+        warnings_ += len(report.warnings)
+    return {
+        "compile_s": compile_s,
+        "verify_s": verify_s,
+        "overhead_frac": verify_s / max(compile_s, 1e-9),
+        "errors": errors,
+        "warnings": warnings_,
     }
 
 
@@ -457,6 +502,7 @@ def collect(quick: bool = False, smoke: bool = False,
             n_devices=2 if smoke else (4 if quick else 8)
         ),
         "consistency": _consistency_check(),
+        "verify": _verify_overhead(),
     }
     return report
 

@@ -19,6 +19,11 @@ hardware model is deterministic:
   machine speed cancels) may not regress beyond ``--time-tol`` times the
   baseline ratio.
 
+The ``verify`` entry is gated absolutely (no baseline needed): the
+static verifier must report zero errors on the bench-compiled programs
+and cost less than ``VERIFY_OVERHEAD_CEIL`` of compile time — a ratio,
+so machine speed cancels.
+
 The ``service`` entry is gated the same two ways: its scheduling is
 deterministic (fixed arrival trace -> exact ``batches_run`` /
 ``occupancy_mean``, ``trace_count`` must be exactly 1, skip statistics
@@ -51,6 +56,10 @@ DETERMINISTIC_RTOL = 1e-6
 # top-1 agreement may wiggle by a boundary flip or two across platforms
 DEFAULT_TOP1_SLACK = 0.02
 MAX_ABS_DIFF_CEIL = 1e-2  # engine vs dense fp32 logits
+# the static verifier must stay cheap enough to leave on at every trust
+# boundary: < 10% of compile time on the bench mini network (an absolute
+# ratio gate — machine speed cancels, so no baseline entry is needed)
+VERIFY_OVERHEAD_CEIL = 0.10
 
 DETERMINISTIC_HW_FIELDS = (
     "crossbars",
@@ -175,6 +184,23 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
             ovh <= bovh * time_tol,
             f"service overhead_vs_forward regressed "
             f"{ovh:.2f} > {time_tol} x baseline {bovh:.2f}",
+        )
+
+    vf = current.get("verify")
+    c.check(vf is not None, "verify overhead entry missing")
+    if vf:
+        c.check(
+            vf.get("errors", 1) == 0,
+            f"static verifier found {vf.get('errors')} error(s) in the "
+            "bench-compiled program",
+        )
+        frac = vf.get("overhead_frac", 1.0)
+        c.check(
+            frac <= VERIFY_OVERHEAD_CEIL,
+            f"verify overhead {frac:.1%} of compile time exceeds "
+            f"{VERIFY_OVERHEAD_CEIL:.0%} "
+            f"(compile {vf.get('compile_s', 0):.3f}s, "
+            f"verify {vf.get('verify_s', 0):.3f}s)",
         )
 
     sh = current.get("sharded", {})

@@ -1,0 +1,36 @@
+"""Static analysis for compiled crossbar programs and the repo itself.
+
+Two halves, one diagnostics currency:
+
+* :mod:`repro.analysis.verify` — an execution-free program verifier over
+  ``BlockPatternWeight`` / ``CompiledNetwork`` / ``NetworkPartition`` /
+  serialized manifests (rules ``V1xx``–``V4xx``, ``M0xx``).  Runs at the
+  trust boundaries: ``compile_network(verify=...)``,
+  ``load_program(verify=True)``, ``partition_network``.
+* :mod:`repro.analysis.lint` — an AST trace-safety lint over
+  ``src/repro/`` (rules ``L0xx``) enforcing jit-purity and tracer
+  discipline in CI.
+
+CLI::
+
+    python -m repro.analysis verify <saved-program-dir> [--json]
+    python -m repro.analysis lint [paths...] [--json]
+"""
+
+from repro.analysis.diagnostics import (
+    ERROR,
+    WARNING,
+    Diagnostic,
+    ProgramFormatError,
+    Report,
+    VerificationError,
+)
+
+__all__ = [
+    "Diagnostic",
+    "Report",
+    "ProgramFormatError",
+    "VerificationError",
+    "ERROR",
+    "WARNING",
+]

@@ -1,0 +1,51 @@
+"""CLI for the static verifier and trace-safety lint.
+
+``python -m repro.analysis verify <dir>`` exits 0 when the saved program
+has no error diagnostics (warnings print but do not fail); ``--json``
+emits the machine-readable report instead of text.
+
+``python -m repro.analysis lint [paths...]`` (default ``src/repro``)
+exits 0 only when the tree is completely clean — CI treats lint
+warnings as failures too, since every rule here guards a correctness
+contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(report, as_json: bool) -> None:
+    print(report.dumps() if as_json else report.format())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("verify", help="verify a saved program directory")
+    v.add_argument("directory")
+    v.add_argument("--json", action="store_true")
+
+    li = sub.add_parser("lint", help="trace-safety lint over source trees")
+    li.add_argument("paths", nargs="*", default=["src/repro"])
+    li.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "verify":
+        from repro.analysis.verify import verify_saved
+
+        report = verify_saved(args.directory)
+        _emit(report, args.json)
+        return 0 if report.ok else 1
+
+    from repro.analysis.lint import lint_paths
+
+    report = lint_paths(args.paths or ["src/repro"])
+    _emit(report, args.json)
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,38 @@ tracer; the jitted forward is byte-identical either way).
   ``InferenceService.metrics_text()`` renders the same registry in
   Prometheus text exposition for scraping.  Process-global metrics live
   in ``repro.obs.get_registry()`` (resettable for test isolation).
+
+Verification
+------------
+``repro.analysis`` statically checks compiled programs — pure numpy
+over the operands, no kernel execution — and is wired in at every
+trust boundary:
+
+* ``compile_network(..., verify='strict')`` verifies the freshly built
+  program and raises ``analysis.VerificationError`` listing every
+  violated invariant; ``verify='warn'`` emits a single warning instead;
+  the default ``None`` skips it (compile output is trusted by
+  construction — turn it on when changing the lowering itself).
+* ``load_program(directory)`` verifies by default: the manifest is
+  validated *before* any array is constructed (a malformed or
+  version-skewed save raises ``analysis.ProgramFormatError``, rule
+  ``M001``–``M005``), then the loaded program is semantically verified
+  (``V1xx``/``V2xx``/``V3xx`` rules).  Pass ``verify=False`` on hot
+  paths that reload a program the same process just saved.
+* ``partition_network`` always validates the partition geometry
+  (``V4xx``: shard counts, tile disjoint-cover, distinct axes) — it is
+  cheap and a bad partition fails far from its cause otherwise.
+* ``CompiledNetwork.verify()`` returns the full diagnostic ``Report``
+  for ad-hoc inspection; ``python -m repro.analysis verify <dir>``
+  does the same for a saved program from the command line.
+
+Each ``Diagnostic`` carries a stable rule id, severity, layer, and
+location string; ``Report.format()`` renders them one per line.
+Warnings (e.g. over-allocated ``k_max``, non-canonical pack order)
+never raise — only errors do.  The companion trace-safety lint
+(``python -m repro.analysis lint src/repro``) runs in CI and keeps
+wall-clock reads, host RNG, and unsynchronized timing out of
+jit-reachable code.
 """
 
 from repro.engine.executor import execute, extract_patches, make_forward

@@ -169,6 +169,7 @@ def compile_network(
     ecfg: EngineConfig = EngineConfig(),
     precision: str | None = None,
     tracer: Tracer | None = None,
+    verify: str | None = None,
 ) -> CompiledNetwork:
     """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
 
@@ -185,7 +186,16 @@ def compile_network(
         span per layer, each wrapping its phase spans
         (prune -> reorder -> pack -> quantize), so a Perfetto load of the
         trace shows exactly where compile time goes.
+      verify: post-condition check of the compiled program via
+        ``repro.analysis.verify`` — ``'strict'`` raises
+        :class:`~repro.analysis.diagnostics.VerificationError` on any
+        error diagnostic, ``'warn'`` emits a Python warning instead,
+        ``None`` (default) skips the pass on this hot compile path.
     """
+    if verify not in (None, "warn", "strict"):
+        raise ValueError(
+            f"verify must be None, 'warn' or 'strict', got {verify!r}"
+        )
     if precision is not None:
         ecfg = dataclasses.replace(ecfg, precision=precision)
     tracer = tracer or NULL_TRACER
@@ -217,7 +227,23 @@ def compile_network(
         with tracer.span("lower:fc", cat="compile"):
             fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg,
                           tracer=tracer)
-    return CompiledNetwork(
+    program = CompiledNetwork(
         config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile,
         precision=ecfg.precision, cell_bits=ecfg.cell_bits,
     )
+    if verify is not None:
+        from repro.analysis.verify import verify_network
+
+        with tracer.span("verify", cat="compile"):
+            report = verify_network(program)
+        if verify == "strict":
+            report.raise_if_errors("compile_network")
+        elif not report.ok:
+            import warnings
+
+            warnings.warn(
+                "compile_network produced a program that fails "
+                "verification:\n" + report.format(),
+                stacklevel=2,
+            )
+    return program

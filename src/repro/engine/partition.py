@@ -158,8 +158,17 @@ def partition_network(
     Returns a new ``CompiledNetwork`` carrying the partition; tile padding
     happens when the executor realizes the partition on a mesh, so the
     stored artifact (and ``serialize.py``) keeps the compact operands.
+    The partition is statically verified against the program (axis names
+    distinct, tile assignment a disjoint cover of every layer's padded
+    tile axis) and an invalid split raises
+    :class:`~repro.analysis.diagnostics.VerificationError` here, at
+    declaration time, instead of surfacing as a shape error inside
+    ``shard_map`` later.
     """
     part = NetworkPartition(
         data=data, model=model, data_axis=data_axis, model_axis=model_axis
     )
+    from repro.analysis.verify import verify_partition
+
+    verify_partition(program, part).raise_if_errors("partition_network")
     return dataclasses.replace(program, partition=part)

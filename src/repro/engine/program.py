@@ -110,6 +110,21 @@ class CompiledNetwork:
         # convs + global-avg-pool + fc
         return len(self.convs) + 2
 
+    def verify(self, strict: bool = False):
+        """Run the static program verifier (``repro.analysis.verify``).
+
+        Returns the diagnostic :class:`~repro.analysis.diagnostics.Report`;
+        with ``strict=True`` raises
+        :class:`~repro.analysis.diagnostics.VerificationError` when any
+        error diagnostic is present.
+        """
+        from repro.analysis.verify import verify_network
+
+        report = verify_network(self)
+        if strict:
+            report.raise_if_errors("CompiledNetwork.verify")
+        return report
+
     def op_list(self) -> list[tuple[str, str]]:
         """Human-readable (op, detail) schedule, in execution order."""
         ops = []

@@ -22,12 +22,19 @@ import shutil
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.diagnostics import ProgramFormatError
 from repro.core.sparse import BlockPatternWeight
 from repro.engine.partition import NetworkPartition
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.models.cnn import CNNConfig
 
-__all__ = ["save_program", "load_program"]
+__all__ = [
+    "save_program",
+    "load_program",
+    "read_manifest",
+    "validate_manifest",
+    "ProgramFormatError",
+]
 
 _MANIFEST = "program.json"
 _FORMAT_VERSION = 2  # v2 adds precision/cell_bits + per-bp w_scales
@@ -146,23 +153,158 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
     return directory
 
 
-def load_program(directory: str) -> CompiledNetwork:
-    """Load a program previously written by :func:`save_program`.
-
-    Falls back to ``<directory>.old`` when the target is missing — a save
-    interrupted between the two swap renames leaves the previous complete
-    program there, so a restarting service still has a model to load.
-    """
+def _resolve_directory(directory: str) -> str:
+    """Fall back to ``<directory>.old`` when the target has no manifest —
+    a save interrupted between the two swap renames leaves the previous
+    complete program there, so a restarting service still has a model."""
     if not os.path.exists(os.path.join(directory, _MANIFEST)):
         old = directory.rstrip("/") + ".old"
         if os.path.exists(os.path.join(old, _MANIFEST)):
-            directory = old
-    with open(os.path.join(directory, _MANIFEST)) as f:
-        manifest = json.load(f)
-    if manifest.get("format_version") not in _SUPPORTED_VERSIONS:
-        raise ValueError(
-            f"unsupported program format {manifest.get('format_version')!r}"
+            return old
+    return directory
+
+
+def read_manifest(directory: str) -> dict:
+    """Read the manifest JSON, raising :class:`ProgramFormatError` (M001)
+    instead of an opaque OSError/JSONDecodeError."""
+    path = os.path.join(_resolve_directory(directory), _MANIFEST)
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except OSError as e:
+        raise ProgramFormatError(
+            f"program manifest unreadable: {path}: {e}", rule="M001"
+        ) from e
+    except ValueError as e:
+        raise ProgramFormatError(
+            f"program manifest is not valid JSON: {path}: {e}", rule="M001"
+        ) from e
+    if not isinstance(manifest, dict):
+        raise ProgramFormatError(
+            f"program manifest is not a JSON object: {path}", rule="M001"
         )
+    return manifest
+
+
+_BP_ARRAY_FIELDS = ("w_comp", "block_ids", "nnz", "new_order", "inv_order",
+                    "dict_masks")
+_CONFIG_KEYS = ("conv_channels", "pool_after", "num_classes", "input_hw",
+                "kernel")
+_CONV_KEYS = ("name", "c_in", "c_out", "kernel", "out_hw", "pool_after",
+              "bias", "pattern_bits", "bp")
+
+
+def _require(entry: dict, keys, where: str) -> None:
+    missing = [k for k in keys if k not in entry]
+    if missing:
+        raise ProgramFormatError(
+            f"program manifest {where} is missing key(s) "
+            f"{', '.join(missing)}", rule="M003"
+        )
+
+
+def _check_bp_entry(entry: dict, directory: str, where: str) -> None:
+    if not isinstance(entry, dict):
+        raise ProgramFormatError(
+            f"program manifest {where} must be an object", rule="M003"
+        )
+    _require(entry, ("k_in", "n_out", "block", "tile", "arrays"), where)
+    arrays = entry["arrays"]
+    if not isinstance(arrays, dict):
+        raise ProgramFormatError(
+            f"program manifest {where}.arrays must be an object", rule="M003"
+        )
+    _require(arrays, _BP_ARRAY_FIELDS, f"{where}.arrays")
+    for field, fname in arrays.items():
+        if not isinstance(fname, str) or not os.path.exists(
+            os.path.join(directory, fname)
+        ):
+            raise ProgramFormatError(
+                f"payload file for {where}.arrays.{field} missing: "
+                f"{fname!r}", rule="M004"
+            )
+
+
+def validate_manifest(manifest: dict, directory: str) -> None:
+    """Validate manifest version, keys, and payload files *before* any
+    array is constructed.  Raises :class:`ProgramFormatError` on the
+    first problem; returns None when the manifest is loadable."""
+    directory = _resolve_directory(directory)
+    version = manifest.get("format_version")
+    if version not in _SUPPORTED_VERSIONS:
+        raise ProgramFormatError(
+            f"unsupported program format version {version!r} "
+            f"(supported: {_SUPPORTED_VERSIONS})", rule="M002"
+        )
+    _require(manifest, ("block", "tile", "config", "convs", "fc"), "root")
+    cfg = manifest["config"]
+    if not isinstance(cfg, dict):
+        raise ProgramFormatError(
+            "program manifest config must be an object", rule="M003"
+        )
+    _require(cfg, _CONFIG_KEYS, "config")
+    convs = manifest["convs"]
+    if not isinstance(convs, list):
+        raise ProgramFormatError(
+            "program manifest convs must be a list", rule="M003"
+        )
+    if manifest.get("precision", "fp32") not in ("fp32", "int8"):
+        raise ProgramFormatError(
+            f"unknown precision {manifest.get('precision')!r}", rule="M003"
+        )
+    for i, e in enumerate(convs):
+        where = f"convs[{i}]"
+        if not isinstance(e, dict):
+            raise ProgramFormatError(
+                f"program manifest {where} must be an object", rule="M003"
+            )
+        _require(e, _CONV_KEYS, where)
+        for field in ("bias", "pattern_bits"):
+            fname = e[field]
+            if not isinstance(fname, str) or not os.path.exists(
+                os.path.join(directory, fname)
+            ):
+                raise ProgramFormatError(
+                    f"payload file for {where}.{field} missing: "
+                    f"{fname!r}", rule="M004"
+                )
+        _check_bp_entry(e["bp"], directory, f"{where}.bp")
+    fce = manifest["fc"]
+    if not isinstance(fce, dict):
+        raise ProgramFormatError(
+            "program manifest fc must be an object", rule="M003"
+        )
+    _require(fce, ("d_in", "d_out", "bias", "bp"), "fc")
+    fname = fce["bias"]
+    if not isinstance(fname, str) or not os.path.exists(
+        os.path.join(directory, fname)
+    ):
+        raise ProgramFormatError(
+            f"payload file for fc.bias missing: {fname!r}", rule="M004"
+        )
+    _check_bp_entry(fce["bp"], directory, "fc.bp")
+    part = manifest.get("partition")
+    if part is not None:
+        _require(part, ("data", "model", "data_axis", "model_axis"),
+                 "partition")
+
+
+def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
+    """Load a program previously written by :func:`save_program`.
+
+    The manifest's version, keys, and payload files are validated
+    *before* any array is constructed — a corrupt or truncated program
+    raises one clear :class:`ProgramFormatError` instead of an opaque
+    ``KeyError`` mid-load.  With ``verify=True`` (the default: saved
+    programs are an untrusted input) the loaded network additionally
+    runs the full static verifier and a
+    :class:`~repro.analysis.diagnostics.VerificationError` carries the
+    diagnostic report.  Pass ``verify=False`` on hot paths that reload
+    programs this process just saved.
+    """
+    directory = _resolve_directory(directory)
+    manifest = read_manifest(directory)
+    validate_manifest(manifest, directory)
     c = manifest["config"]
     cfg = CNNConfig(
         conv_channels=tuple(tuple(x) for x in c["conv_channels"]),
@@ -171,29 +313,37 @@ def load_program(directory: str) -> CompiledNetwork:
         input_hw=c["input_hw"],
         kernel=c["kernel"],
     )
-    convs = [
-        CompiledConv(
-            name=e["name"],
-            c_in=e["c_in"],
-            c_out=e["c_out"],
-            kernel=e["kernel"],
-            out_hw=e["out_hw"],
-            pool_after=e["pool_after"],
-            bp=_load_bp(e["bp"], directory),
-            bias=np.load(os.path.join(directory, e["bias"])),
-            pattern_bits=np.load(os.path.join(directory, e["pattern_bits"])),
+    try:
+        convs = [
+            CompiledConv(
+                name=e["name"],
+                c_in=e["c_in"],
+                c_out=e["c_out"],
+                kernel=e["kernel"],
+                out_hw=e["out_hw"],
+                pool_after=e["pool_after"],
+                bp=_load_bp(e["bp"], directory),
+                bias=np.load(os.path.join(directory, e["bias"])),
+                pattern_bits=np.load(
+                    os.path.join(directory, e["pattern_bits"])
+                ),
+            )
+            for e in manifest["convs"]
+        ]
+        fce = manifest["fc"]
+        fc = CompiledFC(
+            d_in=fce["d_in"],
+            d_out=fce["d_out"],
+            bp=_load_bp(fce["bp"], directory),
+            bias=np.load(os.path.join(directory, fce["bias"])),
         )
-        for e in manifest["convs"]
-    ]
-    fce = manifest["fc"]
-    fc = CompiledFC(
-        d_in=fce["d_in"],
-        d_out=fce["d_out"],
-        bp=_load_bp(fce["bp"], directory),
-        bias=np.load(os.path.join(directory, fce["bias"])),
-    )
+    except (OSError, ValueError) as e:
+        raise ProgramFormatError(
+            f"program payload under {directory} failed to load: {e}",
+            rule="M005",
+        ) from e
     part = manifest.get("partition")
-    return CompiledNetwork(
+    program = CompiledNetwork(
         config=cfg,
         convs=convs,
         fc=fc,
@@ -203,3 +353,10 @@ def load_program(directory: str) -> CompiledNetwork:
         precision=manifest.get("precision", "fp32"),
         cell_bits=int(manifest.get("cell_bits", 4)),
     )
+    if verify:
+        from repro.analysis.verify import verify_network
+
+        verify_network(program).raise_if_errors(
+            f"load_program({directory!r})"
+        )
+    return program

@@ -1,0 +1,489 @@
+"""Mutation tests for the static program verifier.
+
+The contract pinned here: a pristine compiled/serialized program passes
+with zero errors, and corrupting exactly one field flags exactly the
+rule that guards it.  Each catalog entry is (name, mutator, expected
+error-rule set); a seeded sweep also corrupts *random* sites of the
+payload to show detection does not depend on a lucky index.  (Hypothesis
+is not available in this environment, so the catalog + seeded sweep
+stand in for its strategies.)
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import ProgramFormatError, VerificationError
+from repro.analysis.verify import (
+    verify_bp,
+    verify_network,
+    verify_partition,
+    verify_saved,
+)
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+from repro.engine import compile_network, partition_network
+from repro.engine.lowering import EngineConfig
+from repro.engine.partition import NetworkPartition, pad_bp_tiles
+from repro.engine import serialize
+from repro.models.cnn import conv_weight_names, init_cnn, mini_cnn_config
+
+
+@pytest.fixture(scope="module")
+def pruned():
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, 0.7)
+    dicts = build_dictionaries(params, names, 4)
+    params, bits = project_params(params, dicts)
+    return cfg, params, bits
+
+
+@pytest.fixture(scope="module")
+def prog_fp32(pruned):
+    cfg, params, bits = pruned
+    return compile_network(cfg, params, bits,
+                           ecfg=EngineConfig(block=16, tile=16))
+
+
+@pytest.fixture(scope="module")
+def prog_int8(pruned):
+    cfg, params, bits = pruned
+    return compile_network(cfg, params, bits,
+                           ecfg=EngineConfig(block=16, tile=16),
+                           precision="int8")
+
+
+def _with_bp(prog, bp):
+    conv0 = dataclasses.replace(prog.convs[0], bp=bp)
+    return dataclasses.replace(prog, convs=[conv0] + prog.convs[1:])
+
+
+def _np(bp, field):
+    return np.array(getattr(bp, field))  # mutable host copy
+
+
+def _active_slot(bp):
+    """(tile, slot) of an active brick with nonzero weights."""
+    w = _np(bp, "w_comp")
+    nnz = _np(bp, "nnz")
+    for t in range(w.shape[0]):
+        for k in range(int(nnz[t])):
+            if np.any(w[t, k] != 0):
+                return t, k
+    raise AssertionError("fixture has no active nonzero brick")
+
+
+def test_pristine_programs_verify_clean(prog_fp32, prog_int8):
+    for prog in (prog_fp32, prog_int8):
+        report = verify_network(prog)
+        assert report.ok, report.format()
+        assert prog.verify(strict=True).ok
+
+
+# ---------------------------------------------------------------------------
+# operand-level mutation catalog
+# ---------------------------------------------------------------------------
+
+
+def _mut_perm_duplicate(bp, rng):
+    order = _np(bp, "new_order")
+    i, j = rng.choice(len(order), size=2, replace=False)
+    order[i] = order[j]  # no longer a bijection
+    return dataclasses.replace(bp, new_order=order)
+
+
+def _mut_perm_swap(bp, rng):
+    order = _np(bp, "new_order")
+    i, j = rng.choice(len(order), size=2, replace=False)
+    order[[i, j]] = order[[j, i]]  # still a bijection, inverse now stale
+    return dataclasses.replace(bp, new_order=order)
+
+
+def _mut_geometry(bp, rng):
+    return dataclasses.replace(bp, k_in=bp.k_in + 1)
+
+
+def _mut_brick_shape(bp, rng):
+    return dataclasses.replace(bp, w_comp=_np(bp, "w_comp")[:, :, :, :-1])
+
+
+def _mut_blockid_oob(bp, rng):
+    ids = _np(bp, "block_ids")
+    t = rng.integers(ids.shape[0])
+    ids[t, 0] = bp.k_in // bp.block  # one past the last row group
+    return dataclasses.replace(bp, block_ids=ids)
+
+
+def _mut_nnz_over(bp, rng):
+    nnz = _np(bp, "nnz")
+    nnz[rng.integers(len(nnz))] = bp.w_comp.shape[1] + 1
+    return dataclasses.replace(bp, nnz=nnz)
+
+
+def _mut_padded_brick(bp, rng):
+    bp = pad_bp_tiles(bp, bp.n_tiles + 1)  # appends >=1 inert tile
+    w = _np(bp, "w_comp")
+    w[-1, 0, 0, 0] = 3.0 if bp.w_scales is None else 3
+    return dataclasses.replace(bp, w_comp=w)
+
+
+def _mut_dict_masks(bp, rng):
+    return dataclasses.replace(bp, dict_masks=_np(bp, "dict_masks")[:, :-1])
+
+
+OPERAND_MUTATIONS = [
+    ("perm-not-bijective", _mut_perm_duplicate, {"V101"}),
+    ("perm-inverse-stale", _mut_perm_swap, {"V102"}),
+    ("geometry-indivisible", _mut_geometry, {"V103"}),
+    ("brick-shape", _mut_brick_shape, {"V104"}),
+    ("blockid-out-of-bounds", _mut_blockid_oob, {"V105"}),
+    ("nnz-over-capacity", _mut_nnz_over, {"V106"}),
+    ("padded-brick-nonzero", _mut_padded_brick, {"V107"}),
+    ("dict-mask-shape", _mut_dict_masks, {"V109"}),
+]
+
+
+@pytest.mark.parametrize(
+    "name,mutate,expected",
+    OPERAND_MUTATIONS,
+    ids=[m[0] for m in OPERAND_MUTATIONS],
+)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_operand_mutation_flags_rule(prog_fp32, name, mutate, expected, seed):
+    rng = np.random.default_rng(seed)
+    bp = mutate(prog_fp32.convs[0].bp, rng)
+    report = verify_bp(bp, layer="conv1")
+    assert report.rules("error") == expected, report.format()
+
+
+@pytest.mark.parametrize(
+    "name,mutate,expected",
+    OPERAND_MUTATIONS,
+    ids=[m[0] for m in OPERAND_MUTATIONS],
+)
+def test_operand_mutation_caught_at_network_level(
+    prog_fp32, name, mutate, expected
+):
+    rng = np.random.default_rng(0)
+    prog = _with_bp(prog_fp32, mutate(prog_fp32.convs[0].bp, rng))
+    report = verify_network(prog)
+    assert expected <= report.rules("error"), report.format()
+    assert all(d.layer == "conv1" for d in report.errors
+               if d.rule in expected)
+    with pytest.raises(VerificationError) as ei:
+        prog.verify(strict=True)
+    assert ei.value.report.rules("error") >= expected
+
+
+def test_blockid_order_is_a_warning_not_error(prog_fp32):
+    for conv in prog_fp32.convs:
+        bp = conv.bp
+        nnz = _np(bp, "nnz")
+        tiles = np.flatnonzero(nnz >= 2)
+        if tiles.size:
+            break
+    assert tiles.size, "fixture needs a tile with >= 2 active bricks"
+    ids = _np(bp, "block_ids")
+    t = int(tiles[0])
+    ids[t, [0, 1]] = ids[t, [1, 0]]  # valid set, non-canonical order
+    report = verify_bp(dataclasses.replace(bp, block_ids=ids), layer="x")
+    assert report.ok
+    assert "V108" in report.rules("warning")
+
+
+# ---------------------------------------------------------------------------
+# quantized-path mutations
+# ---------------------------------------------------------------------------
+
+
+def _mut_scale_shape(bp, rng):
+    return dataclasses.replace(bp, w_scales=_np(bp, "w_scales")[:, :-1])
+
+
+def _mut_scale_nan(bp, rng):
+    s = _np(bp, "w_scales")
+    t, k = _active_slot(bp)
+    s[t, k] = np.nan
+    return dataclasses.replace(bp, w_scales=s)
+
+
+def _mut_scale_zero(bp, rng):
+    s = _np(bp, "w_scales")
+    t, k = _active_slot(bp)
+    s[t, k] = 0.0  # silently drops a nonzero brick
+    return dataclasses.replace(bp, w_scales=s)
+
+
+def _mut_dtype(bp, rng):
+    return dataclasses.replace(
+        bp, w_comp=_np(bp, "w_comp").astype(np.float32)
+    )
+
+
+def _mut_minus_128(bp, rng):
+    w = _np(bp, "w_comp")
+    t, k = _active_slot(bp)
+    w[t, k, 0, 0] = -128  # out of symmetric range AND breaks cell slicing
+    return dataclasses.replace(bp, w_comp=w)
+
+
+QUANT_MUTATIONS = [
+    ("scale-shape", _mut_scale_shape, {"V110"}),
+    ("scale-nan", _mut_scale_nan, {"V111"}),
+    ("scale-zero-drops-brick", _mut_scale_zero, {"V112"}),
+    ("quant-dtype", _mut_dtype, {"V113"}),
+    ("minus-128-range-and-roundtrip", _mut_minus_128, {"V113", "V114"}),
+]
+
+
+@pytest.mark.parametrize(
+    "name,mutate,expected",
+    QUANT_MUTATIONS,
+    ids=[m[0] for m in QUANT_MUTATIONS],
+)
+def test_quantized_mutation_flags_rule(prog_int8, name, mutate, expected):
+    rng = np.random.default_rng(0)
+    bp = mutate(prog_int8.convs[0].bp, rng)
+    report = verify_bp(bp, layer="conv1")
+    assert report.rules("error") == expected, report.format()
+
+
+def test_fp32_nonfinite_weight(prog_fp32):
+    bp = prog_fp32.convs[0].bp
+    w = _np(bp, "w_comp")
+    t, k = _active_slot(bp)
+    w[t, k, 0, 0] = np.nan
+    report = verify_bp(dataclasses.replace(bp, w_comp=w), layer="x")
+    assert report.rules("error") == {"V115"}, report.format()
+
+
+# ---------------------------------------------------------------------------
+# layer/network/partition mutations
+# ---------------------------------------------------------------------------
+
+
+def test_pattern_bits_out_of_window(prog_fp32):
+    conv0 = prog_fp32.convs[0]
+    bits = np.array(conv0.pattern_bits)
+    bits[0, 0] = 1 << (conv0.kernel * conv0.kernel)  # one past the window
+    prog = dataclasses.replace(
+        prog_fp32,
+        convs=[dataclasses.replace(conv0, pattern_bits=bits)]
+        + prog_fp32.convs[1:],
+    )
+    assert verify_network(prog).rules("error") == {"V202"}
+
+
+def test_pattern_bits_shape(prog_fp32):
+    conv0 = prog_fp32.convs[0]
+    prog = dataclasses.replace(
+        prog_fp32,
+        convs=[dataclasses.replace(
+            conv0, pattern_bits=np.array(conv0.pattern_bits)[:, :0]
+        )] + prog_fp32.convs[1:],
+    )
+    assert verify_network(prog).rules("error") == {"V201"}
+
+
+def test_bias_shape(prog_fp32):
+    conv0 = prog_fp32.convs[0]
+    prog = dataclasses.replace(
+        prog_fp32,
+        convs=[dataclasses.replace(conv0, bias=conv0.bias[:-1])]
+        + prog_fp32.convs[1:],
+    )
+    assert verify_network(prog).rules("error") == {"V204"}
+
+
+def test_layer_chain_break(prog_fp32):
+    fc = dataclasses.replace(
+        prog_fp32.fc,
+        d_out=prog_fp32.fc.d_out + 1,
+        bias=np.zeros(prog_fp32.fc.d_out + 1, np.float32),
+    )
+    prog = dataclasses.replace(prog_fp32, fc=fc)
+    assert verify_network(prog).rules("error") == {"V301"}
+
+
+def test_precision_contract(prog_fp32):
+    prog = dataclasses.replace(prog_fp32, precision="int8")
+    assert verify_network(prog).rules("error") == {"V302"}
+
+
+def test_program_tile_disagreement(prog_fp32):
+    prog = dataclasses.replace(prog_fp32, tile=8)
+    assert verify_network(prog).rules("error") == {"V303"}
+
+
+def test_partition_same_axis(prog_fp32):
+    part = NetworkPartition(data=2, model=2, data_axis="x", model_axis="x")
+    report = verify_partition(prog_fp32, part)
+    assert report.rules("error") == {"V403"}
+    with pytest.raises(VerificationError):
+        partition_network(prog_fp32, data=2, model=2,
+                          data_axis="x", model_axis="x")
+
+
+def test_partition_nonpositive(prog_fp32):
+    part = NetworkPartition(data=1, model=1)
+    object.__setattr__(part, "model", 0)  # bypass __post_init__
+    assert verify_partition(prog_fp32, part).rules("error") == {"V401"}
+
+
+def test_partition_valid_passes(prog_fp32):
+    prog = partition_network(prog_fp32, data=2, model=4)
+    assert verify_network(prog).ok
+
+
+def test_compile_network_verify_modes(pruned):
+    cfg, params, bits = pruned
+    ecfg = EngineConfig(block=16, tile=16)
+    prog = compile_network(cfg, params, bits, ecfg=ecfg, verify="strict")
+    assert verify_network(prog).ok
+    compile_network(cfg, params, bits, ecfg=ecfg, verify="warn")
+    with pytest.raises(ValueError, match="verify must be"):
+        compile_network(cfg, params, bits, ecfg=ecfg, verify="bogus")
+
+
+# ---------------------------------------------------------------------------
+# serialized programs: manifest statics + load-time verification
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def saved(prog_int8, tmp_path):
+    path = os.path.join(tmp_path, "prog")
+    serialize.save_program(path, prog_int8)
+    return path
+
+
+def _manifest(path):
+    with open(os.path.join(path, "program.json")) as f:
+        return json.load(f)
+
+
+def _rewrite(path, manifest):
+    with open(os.path.join(path, "program.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def test_saved_pristine_roundtrip(saved):
+    assert verify_saved(saved).ok
+    prog = serialize.load_program(saved)  # verify=True default
+    assert verify_network(prog).ok
+
+
+@pytest.mark.parametrize(
+    "corrupt,rule",
+    [
+        (lambda p: _rewrite(p, {**_manifest(p), "format_version": 99}),
+         "M002"),
+        (lambda p: _rewrite(
+            p, {k: v for k, v in _manifest(p).items() if k != "fc"}
+        ), "M003"),
+        (lambda p: os.remove(os.path.join(p, "conv1.bias.npy")), "M004"),
+        (lambda p: open(
+            os.path.join(p, "program.json"), "w"
+        ).write("{truncated"), "M001"),
+        (lambda p: open(
+            os.path.join(p, "fc.w_comp.npy"), "wb"
+        ).write(b"not-an-npy"), "M005"),
+    ],
+    ids=["bad-version", "missing-key", "missing-payload", "truncated-json",
+         "corrupt-payload"],
+)
+def test_corrupt_saved_program(saved, corrupt, rule):
+    corrupt(saved)
+    with pytest.raises(ProgramFormatError) as ei:
+        serialize.load_program(saved)
+    assert ei.value.rule == rule
+    report = verify_saved(saved)
+    assert report.rules("error") == {rule}, report.format()
+
+
+def test_load_verifies_semantic_corruption(saved):
+    # swap two permutation entries inside the stored payload: the file is
+    # structurally valid (every M-rule passes) but semantically wrong
+    fname = os.path.join(saved, "conv1.new_order.npy")
+    order = np.load(fname)
+    order[[0, 1]] = order[[1, 0]]
+    np.save(fname, order)
+    with pytest.raises(VerificationError) as ei:
+        serialize.load_program(saved)
+    assert "V102" in ei.value.report.rules("error")
+    # opt-out still loads the raw payload
+    prog = serialize.load_program(saved, verify=False)
+    assert prog.convs
+    assert verify_saved(saved).rules("error") == {"V102"}
+
+
+# ---------------------------------------------------------------------------
+# seeded random-site sweep (hypothesis-style corruption of one field)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_single_field_corruption_is_caught(prog_int8, seed):
+    rng = np.random.default_rng(seed)
+    bp = prog_int8.convs[0].bp
+    family = rng.integers(4)
+    if family == 0:  # corrupt a random permutation entry
+        order = _np(bp, "new_order")
+        order[rng.integers(len(order))] += 1
+        bp = dataclasses.replace(bp, new_order=order % len(order))
+        expect = {"V101", "V102"}
+    elif family == 1:  # corrupt a random block id
+        ids = _np(bp, "block_ids")
+        t = rng.integers(ids.shape[0])
+        ids[t, 0] = bp.k_in // bp.block + rng.integers(3)
+        bp = dataclasses.replace(bp, block_ids=ids)
+        expect = {"V105"}
+    elif family == 2:  # shift a random nnz (row-group count)
+        nnz = _np(bp, "nnz")
+        nnz[rng.integers(len(nnz))] = -1 - rng.integers(3)
+        bp = dataclasses.replace(bp, nnz=nnz)
+        expect = {"V106"}
+    else:  # zero a random active scale over a nonzero brick
+        s = _np(bp, "w_scales")
+        t, k = _active_slot(bp)
+        s[t, k] = 0.0
+        bp = dataclasses.replace(bp, w_scales=s)
+        expect = {"V112"}
+    report = verify_bp(bp, layer="conv1")
+    assert report.rules("error") & expect, (
+        f"seed {seed} family {family}: {report.format()}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_verify(saved, capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["verify", saved]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+    assert main(["verify", saved, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is True and doc["errors"] == 0
+
+    fname = os.path.join(saved, "conv1.new_order.npy")
+    order = np.load(fname)
+    order[[0, 1]] = order[[1, 0]]
+    np.save(fname, order)
+    assert main(["verify", saved, "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["errors"] >= 1
+    assert any(d["rule"] == "V102" for d in doc["diagnostics"])
