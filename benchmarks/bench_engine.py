@@ -421,6 +421,125 @@ def _synthetic_vgg():
     return cfg, params, bits
 
 
+def _mapping_model_entry(name: str, cfg, params, bits,
+                         sparsity: float | None = None) -> dict:
+    """Fixed-vs-searched mapping numbers for one model.
+
+    Compiles the same pruned network twice — the fixed paper scheme and
+    ``optimize='auto'`` — and reports the deterministic chosen-vs-fixed
+    crossbar area/energy ratios, whether the search is drift-free against
+    the simulator pricing (``mapping_cost`` == report rows, exact
+    equality), whether a standalone re-search reproduces the compiled
+    choice byte-for-byte, and the search wall-clock relative to a fixed
+    compile (a ratio, so machine speed cancels).
+    """
+    from repro.core.simulator import mapping_cost
+    from repro.engine.lowering import conv_mapping_search
+
+    # fixed compile: best-of-2 removes timer noise from the ratio gate
+    times = []
+    for _ in range(2):
+        t0 = time.perf_counter()
+        prog_fixed = compile_network(cfg, params, bits)
+        times.append(time.perf_counter() - t0)
+    fixed_compile_s = min(times)
+
+    tr = Tracer()
+    prog_auto = compile_network(cfg, params, bits, optimize="auto",
+                                tracer=tr)
+    search_spans = [s for s in tr.spans("compile")
+                    if s.name.startswith("search:")]
+    search_s = float(sum(s.dur for s in search_spans))
+    evaluations = int(sum(s.args.get("evaluations", 0)
+                          for s in search_spans))
+
+    # determinism: the standalone search must reproduce the compiled
+    # choice exactly (same seed -> same candidate)
+    deterministic = True
+    for i, c in enumerate(prog_auto.convs, start=1):
+        res = conv_mapping_search(
+            np.asarray(params[f"conv{i}"]["w"]), bits.get(f"conv{i}"),
+            c.out_hw,
+        )
+        deterministic &= res.chosen == c.mapping
+
+    rf = prog_fixed.hardware_report()
+    ra = prog_auto.hardware_report()
+
+    # zero-drift: the search's cost model re-prices every chosen layer to
+    # the exact report numbers (== on floats, not a tolerance)
+    cost_exact = True
+    for c, row in zip(prog_auto.convs, ra["layers"]):
+        mc = mapping_cost(c.pattern_bits, c.mapping, c.out_hw ** 2,
+                          c.kernel ** 2)
+        cost_exact &= (
+            mc.crossbars == row["crossbars"]
+            and mc.area_cells == row["area_cells"]
+            and mc.energy_pj == row["energy_pj"]
+            and mc.cycles == row["cycles"]
+        )
+
+    area_ratio = ra["area_cells"] / max(rf["area_cells"], 1)
+    energy_ratio = ra["energy_pj"] / max(rf["energy_pj"], 1e-9)
+    return {
+        "model": name,
+        "sparsity": sparsity,
+        "fixed": {"area_cells": rf["area_cells"],
+                  "energy_pj": rf["energy_pj"],
+                  "cycles": rf["cycles"],
+                  "crossbars": rf["crossbars"]},
+        "searched": {"area_cells": ra["area_cells"],
+                     "energy_pj": ra["energy_pj"],
+                     "cycles": ra["cycles"],
+                     "crossbars": ra["crossbars"]},
+        "chosen": ra["mapping"]["per_layer"],
+        "fc_reorder": ra["mapping"]["fc_reorder"],
+        "area_ratio": area_ratio,
+        "energy_ratio": energy_ratio,
+        "searched_le_fixed": (
+            ra["area_cells"] <= rf["area_cells"]
+            and ra["energy_pj"] <= rf["energy_pj"]
+        ),
+        "strictly_improved": (
+            ra["area_cells"] < rf["area_cells"]
+            or ra["energy_pj"] < rf["energy_pj"]
+        ),
+        "cost_model_exact": cost_exact,
+        "search_deterministic": deterministic,
+        "evaluations": evaluations,
+        "search_s": search_s,
+        "fixed_compile_s": fixed_compile_s,
+        "search_overhead": search_s / max(fixed_compile_s, 1e-9),
+    }
+
+
+def _mapping_entry(smoke: bool) -> dict:
+    """The ``mapping`` bench entry: searched must match-or-beat fixed on
+    area *and* energy for every model here (``check_baseline.py`` gates
+    the aggregate booleans and the deterministic ratios)."""
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params, bits = _pruned(cfg, 0.75, num_patterns=8, seed=1)
+    models = [_mapping_model_entry("mini_cnn", cfg, params, bits, 0.75)]
+    if not smoke:
+        vcfg, vparams, vbits = _synthetic_vgg()
+        models.append(
+            _mapping_model_entry("vgg16_cifar_synth", vcfg, vparams, vbits)
+        )
+    return {
+        "models": models,
+        "all_searched_le_fixed": all(
+            m["searched_le_fixed"] for m in models
+        ),
+        "any_strictly_improved": any(
+            m["strictly_improved"] for m in models
+        ),
+        "cost_model_exact": all(m["cost_model_exact"] for m in models),
+        "search_deterministic": all(
+            m["search_deterministic"] for m in models
+        ),
+    }
+
+
 def _consistency_check() -> dict:
     """Engine hardware_report vs simulate_dataset on identical bits."""
     cfg, params, bits = _synthetic_vgg()
@@ -503,6 +622,7 @@ def collect(quick: bool = False, smoke: bool = False,
         ),
         "consistency": _consistency_check(),
         "verify": _verify_overhead(),
+        "mapping": _mapping_entry(smoke),
     }
     return report
 
@@ -558,6 +678,19 @@ def run():
         f";simulator={c['simulator_crossbars']}"
         f";match={c['per_layer_match']}"
     )
+    mp = report["mapping"]
+    for m in mp["models"]:
+        yield (
+            f"engine_mapping_{m['model']},"
+            f"{m['search_s'] * 1e6:.1f},"
+            f"area_ratio={m['area_ratio']:.4f}"
+            f";energy_ratio={m['energy_ratio']:.4f}"
+            f";le_fixed={m['searched_le_fixed']}"
+            f";improved={m['strictly_improved']}"
+            f";cost_exact={m['cost_model_exact']}"
+            f";deterministic={m['search_deterministic']}"
+            f";evals={m['evaluations']}"
+        )
 
 
 def main():

@@ -24,6 +24,13 @@ static verifier must report zero errors on the bench-compiled programs
 and cost less than ``VERIFY_OVERHEAD_CEIL`` of compile time — a ratio,
 so machine speed cancels.
 
+The ``mapping`` entry gates the design-space search the same two ways:
+the Pareto guarantee (searched never worse than the fixed paper scheme
+on area *and* energy, at least one model strictly improved), the
+zero-drift cost-model contract, search determinism, and the chosen
+area/energy ratios are all deterministic; only the search-time-over-
+compile-time ratio is wall-clock (gated loosely vs the baseline).
+
 The ``service`` entry is gated the same two ways: its scheduling is
 deterministic (fixed arrival trace -> exact ``batches_run`` /
 ``occupancy_mean``, ``trace_count`` must be exactly 1, skip statistics
@@ -212,6 +219,59 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
             f"exceeds {MAX_ABS_DIFF_CEIL:.0e}"
         )
         c.check(sh["max_abs_diff"] <= MAX_ABS_DIFF_CEIL, msg)
+
+    mp = current.get("mapping")
+    c.check(mp is not None, "mapping search entry missing")
+    if mp:
+        # Pareto guarantee: the searched mapping may never lose to the
+        # fixed paper scheme on crossbar area or energy, and at least one
+        # bench model must come out strictly ahead
+        c.check(
+            mp.get("all_searched_le_fixed") is True,
+            "mapping: searched scheme worse than fixed on area or energy",
+        )
+        c.check(
+            mp.get("any_strictly_improved") is True,
+            "mapping: no bench model strictly improved by the search",
+        )
+        # zero-drift contract: mapping_cost must re-price every chosen
+        # layer to the exact hardware_report numbers
+        c.check(
+            mp.get("cost_model_exact") is True,
+            "mapping: cost model drifted from simulator pricing",
+        )
+        c.check(
+            mp.get("search_deterministic") is True,
+            "mapping: standalone re-search diverged from compiled choice",
+        )
+    bmp = baseline.get("mapping")
+    if mp and bmp:
+        cur_models = {m["model"]: m for m in mp.get("models", [])}
+        for bm in bmp.get("models", []):
+            m = cur_models.get(bm["model"])
+            c.check(
+                m is not None,
+                f"mapping: model {bm['model']} missing from report",
+            )
+            if m is None:
+                continue
+            tag = f"mapping {bm['model']}"
+            # ratios depend only on seeds and the pricing code
+            c.close(m["area_ratio"], bm["area_ratio"], f"{tag}: area_ratio")
+            c.close(m["energy_ratio"], bm["energy_ratio"],
+                    f"{tag}: energy_ratio")
+            c.close(m["searched"]["area_cells"], bm["searched"]["area_cells"],
+                    f"{tag}: searched area_cells")
+            c.close(m["evaluations"], bm["evaluations"],
+                    f"{tag}: evaluations")
+            # loose wall-clock gate: search time over a fixed compile is a
+            # ratio, so machine speed cancels
+            ovh, bovh = m["search_overhead"], bm["search_overhead"]
+            c.check(
+                ovh <= bovh * time_tol,
+                f"{tag}: search overhead regressed "
+                f"{ovh:.1f} > {time_tol} x baseline {bovh:.1f}",
+            )
     return c
 
 

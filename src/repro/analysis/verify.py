@@ -35,6 +35,13 @@ V202   pattern bitmasks lie within the ``kernel x kernel`` window
 V203   layer-vs-operand geometry: ``bp.k_in``/``bp.n_out`` are exactly the
        padded matmul dims of the layer
 V204   bias shape/finiteness
+V205   mapping strategy tags are known (``block_order`` in
+       ``BLOCK_ORDERS``, conv/fc ``reorder`` in ``REORDERS``) and the
+       candidate's geometry fields are positive
+V206   mapping geometry is consistent with the packed operands: the OU
+       fits the crossbar, a weight's cell slices fit one row, the OU can
+       hold the layer's tallest pattern block, and an int8 program's
+       mapping stores the cell-slice count its payload actually occupies
 V301   inter-layer shape chaining (channels, spatial dims, fc head)
 V302   precision contract: ``precision``/``cell_bits`` agree with the
        stored payloads
@@ -74,8 +81,10 @@ from repro.analysis.diagnostics import (
     ProgramFormatError,
     Report,
 )
+from repro.core.mapping import BLOCK_ORDERS
+from repro.core.patterns import ALL_ZERO, pattern_sizes
 from repro.core.quantize import QMAX, cell_slices, compose_cell_slices
-from repro.core.sparse import BlockPatternWeight
+from repro.core.sparse import REORDERS, BlockPatternWeight
 
 __all__ = [
     "verify_bp",
@@ -376,6 +385,84 @@ def _verify_bias(r: Report, bias, n: int, layer: str) -> None:
               layer=layer, location="bias")
 
 
+def _verify_mapping(r: Report, conv) -> None:
+    """V205/V206: a searched per-layer mapping candidate, if present.
+
+    ``MappingCandidate`` is deliberately unvalidated at construction so a
+    corrupted save surfaces here as a diagnostic rather than a load-time
+    construction error."""
+    m = getattr(conv, "mapping", None)
+    if m is None:
+        return
+    name = conv.name
+    if m.block_order not in BLOCK_ORDERS:
+        r.add(
+            "V205",
+            f"unknown mapping block_order {m.block_order!r} "
+            f"(known: {BLOCK_ORDERS})",
+            layer=name, location="mapping.block_order",
+        )
+    if m.reorder not in REORDERS:
+        r.add(
+            "V205",
+            f"unknown mapping reorder {m.reorder!r} (known: {REORDERS})",
+            layer=name, location="mapping.reorder",
+        )
+    dims = {
+        "rows": m.rows,
+        "cols": m.cols,
+        "cells_per_weight": m.cells_per_weight,
+        "ou_rows": m.ou_rows,
+        "ou_cols": m.ou_cols,
+    }
+    bad = {k: v for k, v in dims.items() if v < 1}
+    if bad:
+        r.add(
+            "V205",
+            f"non-positive mapping geometry: {bad}",
+            layer=name, location="mapping",
+        )
+        return  # consistency checks below assume positive dims
+    if m.ou_rows > m.rows:
+        r.add(
+            "V206",
+            f"mapping ou_rows={m.ou_rows} exceeds crossbar rows={m.rows}",
+            layer=name, location="mapping.ou_rows",
+        )
+    if m.ou_cols > m.cols:
+        r.add(
+            "V206",
+            f"mapping ou_cols={m.ou_cols} exceeds crossbar cols={m.cols}",
+            layer=name, location="mapping.ou_cols",
+        )
+    if m.cells_per_weight > m.cols:
+        r.add(
+            "V206",
+            f"mapping cells_per_weight={m.cells_per_weight} exceeds "
+            f"crossbar cols={m.cols} (one weight must fit one row)",
+            layer=name, location="mapping.cells_per_weight",
+        )
+    bits = np.asarray(conv.pattern_bits)
+    if (
+        bits.ndim == 2
+        and bits.size
+        and np.issubdtype(bits.dtype, np.integer)
+        and bits.min() >= 0
+    ):
+        nz = bits != ALL_ZERO
+        if np.any(nz):
+            max_h = int(pattern_sizes(bits)[nz].max())
+            if m.ou_rows < max_h:
+                r.add(
+                    "V206",
+                    f"mapping ou_rows={m.ou_rows} cannot hold the layer's "
+                    f"tallest pattern block (height {max_h}): "
+                    "pattern_ou_schedule never splits a block across OU "
+                    "row groups",
+                    layer=name, location="mapping.ou_rows",
+                )
+
+
 def verify_conv(conv, cell_bits: int = 4, report: Report | None = None) -> Report:
     """Verify one compiled conv layer (V2xx + its operand's V1xx)."""
     r = report if report is not None else Report()
@@ -438,6 +525,7 @@ def verify_conv(conv, cell_bits: int = 4, report: Report | None = None) -> Repor
             layer=name, location="bp.n_out",
         )
     _verify_bias(r, conv.bias, conv.c_out, name)
+    _verify_mapping(r, conv)
     return r
 
 
@@ -445,6 +533,13 @@ def verify_fc(fc, cell_bits: int = 4, report: Report | None = None) -> Report:
     """Verify the compiled FC head (V2xx + operand V1xx)."""
     r = report if report is not None else Report()
     verify_bp(fc.bp, layer="fc", cell_bits=cell_bits, report=r)
+    reorder = getattr(fc, "reorder", "pattern")
+    if reorder not in REORDERS:
+        r.add(
+            "V205",
+            f"unknown fc reorder {reorder!r} (known: {REORDERS})",
+            layer="fc", location="reorder",
+        )
     bp = fc.bp
     if fc.d_in < 1 or fc.d_out < 1:
         r.add("V203", f"non-positive fc dims: d_in={fc.d_in} d_out={fc.d_out}",
@@ -545,6 +640,22 @@ def verify_network(program, report: Report | None = None) -> Report:
     for conv in program.convs:
         verify_conv(conv, cell_bits=program.cell_bits, report=r)
     verify_fc(program.fc, cell_bits=program.cell_bits, report=r)
+
+    # V206 storage consistency: an int8 program's searched mappings must
+    # price the cell-slice count its payload actually occupies (the same
+    # derivation hardware_report uses)
+    stored = program.cells_per_weight
+    if stored is not None:
+        for conv in program.convs:
+            m = getattr(conv, "mapping", None)
+            if m is not None and m.cells_per_weight != stored:
+                r.add(
+                    "V206",
+                    f"mapping cells_per_weight={m.cells_per_weight} != "
+                    f"the stored cell-slice count {stored} "
+                    f"(int8 over {program.cell_bits}-bit cells)",
+                    layer=conv.name, location="mapping.cells_per_weight",
+                )
 
     # V301 inter-layer chain
     if len(program.convs) != cfg.num_convs:

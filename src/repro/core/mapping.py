@@ -36,7 +36,9 @@ import numpy as np
 from repro.core.patterns import ALL_ZERO, PatternDict, pattern_sizes
 
 __all__ = [
+    "BLOCK_ORDERS",
     "CrossbarConfig",
+    "MappingCandidate",
     "Placement",
     "PatternBlock",
     "LayerMapping",
@@ -44,6 +46,10 @@ __all__ = [
     "map_layer",
     "map_layer_naive",
 ]
+
+# packing orders map_layer understands; the optimizer (core/mapsearch.py)
+# searches over them and the verifier (V205) rejects anything else
+BLOCK_ORDERS = ("pattern", "channel", "width", "similarity", "hybrid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +65,73 @@ class CrossbarConfig:
     @property
     def weight_cols(self) -> int:
         return self.cols // self.cells_per_weight
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCandidate:
+    """One point of the mapping design space (geometry + strategy tags).
+
+    A candidate pins down everything ``hardware_report`` needs to price a
+    layer — crossbar dims, cells per weight, OU shape, the crossbar
+    packing order (``block_order``, a ``map_layer`` order) — plus the
+    operand-level column ``reorder`` strategy
+    (``core/sparse.reorder_columns``), which never changes the priced
+    hardware numbers but does change the compressed operand's brick
+    count.  ``core/mapsearch.py`` searches over candidates per layer;
+    the chosen one rides on ``CompiledConv.mapping`` and in the saved
+    manifest (format v3).
+
+    Deliberately *not* validated at construction: the verifier
+    (V205/V206) owns validity so corrupted saves surface as diagnostics,
+    not construction errors.
+    """
+
+    rows: int = 512
+    cols: int = 512  # in cells
+    cells_per_weight: int = 4
+    ou_rows: int = 9
+    ou_cols: int = 8  # in cells
+    block_order: str = "pattern"
+    reorder: str = "pattern"
+
+    def crossbar_config(self) -> CrossbarConfig:
+        return CrossbarConfig(
+            rows=self.rows,
+            cols=self.cols,
+            cells_per_weight=self.cells_per_weight,
+            ou_rows=self.ou_rows,
+            ou_cols=self.ou_cols,
+        )
+
+    def sort_key(self) -> tuple:
+        """Deterministic total order (search tie-breaking)."""
+        return (
+            self.rows, self.cols, self.cells_per_weight,
+            self.ou_rows, self.ou_cols, self.block_order, self.reorder,
+        )
+
+    def to_manifest(self) -> dict:
+        return {
+            "rows": self.rows,
+            "cols": self.cols,
+            "cells_per_weight": self.cells_per_weight,
+            "ou_rows": self.ou_rows,
+            "ou_cols": self.ou_cols,
+            "block_order": self.block_order,
+            "reorder": self.reorder,
+        }
+
+    @classmethod
+    def from_manifest(cls, entry: dict) -> "MappingCandidate":
+        return cls(
+            rows=int(entry["rows"]),
+            cols=int(entry["cols"]),
+            cells_per_weight=int(entry["cells_per_weight"]),
+            ou_rows=int(entry["ou_rows"]),
+            ou_cols=int(entry["ou_cols"]),
+            block_order=str(entry["block_order"]),
+            reorder=str(entry["reorder"]),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,6 +292,35 @@ def _blocks_for_channel(
     return out
 
 
+def _pattern_similarity_rank(patterns: Iterable[int]) -> dict[int, int]:
+    """Greedy nearest-neighbour chain over a layer's unique patterns.
+
+    Starts from the largest pattern (most set bits; ties toward the
+    smaller bitmask) and repeatedly appends the unvisited pattern with
+    the greatest bit overlap with the current one (ties: smaller
+    symmetric difference, then smaller bitmask) — the bit-level
+    column-similarity ordering of arXiv 2511.14202 applied at pattern
+    granularity.  Returns pattern -> chain rank; fully deterministic.
+    """
+    uniq = sorted(set(int(p) for p in patterns))
+    if not uniq:
+        return {}
+    pop = {p: bin(p).count("1") for p in uniq}
+    cur = min(uniq, key=lambda p: (-pop[p], p))
+    remaining = set(uniq)
+    rank: dict[int, int] = {}
+    while True:
+        rank[cur] = len(rank)
+        remaining.discard(cur)
+        if not remaining:
+            return rank
+        cur = min(
+            remaining,
+            key=lambda p: (-bin(cur & p).count("1"),
+                           bin(cur ^ p).count("1"), p),
+        )
+
+
 def map_layer(
     pattern_bits: np.ndarray,
     config: CrossbarConfig = CrossbarConfig(),
@@ -244,6 +346,12 @@ def map_layer(
           kept for comparison.
         'width' — beyond-paper: global sort by width desc then height desc
           (best-fit-decreasing flavour); slightly better than 'pattern'.
+        'similarity' — beyond-paper: blocks follow the greedy
+          pattern-similarity chain (``_pattern_similarity_rank``), width
+          descending within a pattern, so strips hold near-identical
+          *shapes* even when pattern ids are far apart.
+        'hybrid' — beyond-paper: height descending first (the packer's
+          strongest signal), similarity-chain rank within equal heights.
 
     Returns:
       LayerMapping with placements and area accounting.
@@ -263,6 +371,17 @@ def map_layer(
         blocks.sort(key=lambda b: (-b.height, b.pattern, -b.n_kernels, b.channel))
     elif block_order == "width":
         blocks.sort(key=lambda b: (-b.n_kernels, -b.height, b.pattern, b.channel))
+    elif block_order in ("similarity", "hybrid"):
+        rank = _pattern_similarity_rank(b.pattern for b in blocks)
+        if block_order == "similarity":
+            blocks.sort(
+                key=lambda b: (rank[b.pattern], -b.n_kernels, b.channel)
+            )
+        else:
+            blocks.sort(
+                key=lambda b: (-b.height, rank[b.pattern], -b.n_kernels,
+                               b.channel)
+            )
     elif block_order != "channel":
         raise ValueError(f"unknown block_order {block_order!r}")
 

@@ -29,7 +29,12 @@ import numpy as np
 
 from repro.core.crossbar import EnergyModel
 from repro.core.indexing import build_index_stream, index_overhead_bits
-from repro.core.mapping import CrossbarConfig, map_layer, map_layer_naive
+from repro.core.mapping import (
+    CrossbarConfig,
+    MappingCandidate,
+    map_layer,
+    map_layer_naive,
+)
 from repro.core.ou import OUSchedule, naive_ou_schedule, pattern_ou_schedule
 from repro.core.patterns import bits_to_mask
 from repro.core.synthetic import (
@@ -40,9 +45,11 @@ from repro.core.synthetic import (
 
 __all__ = [
     "LayerResult",
+    "MappingCost",
     "SimulationReport",
     "SkipDistribution",
     "drift_table",
+    "mapping_cost",
     "simulate_layer",
     "simulate_layer_multi",
     "simulate_network",
@@ -203,6 +210,10 @@ class LayerResult:
     stored_kernels: int
     total_kernels: int
     utilization: float
+    # crossbar area in *cells* — the comparable unit once per-layer
+    # crossbar dims differ (a searched 128x128 crossbar is not a 512x512)
+    naive_area_cells: int = 0
+    ours_area_cells: int = 0
 
 
 def _sched_energy_cycles(
@@ -231,6 +242,8 @@ def simulate_layer_multi(
     config: CrossbarConfig = CrossbarConfig(),
     energy: EnergyModel = EnergyModel(),
     naive_skips: bool = False,
+    block_order: str = "pattern",
+    naive_config: CrossbarConfig | None = None,
 ) -> dict[str, LayerResult]:
     """Price one layer under several skip-probability sources at once.
 
@@ -238,13 +251,23 @@ def simulate_layer_multi(
     bits, so they are computed once and re-priced per entry of
     ``skip_sources`` (name -> any ``_skip_fractions`` source) — pricing a
     layer no-skip/assumed/measured costs one ``map_layer``, not three.
+
+    ``block_order`` is forwarded to ``map_layer`` (the pattern-pruned
+    side only).  ``naive_config`` prices the Fig-1 baseline at a
+    different geometry than ``config`` — when a searched per-layer
+    mapping shrinks the crossbar, the naive comparison must stay at the
+    *reference* geometry or the area-efficiency ratio silently inflates;
+    ``None`` keeps both sides on ``config`` (the historical behaviour).
     """
     spec = layer.spec
     windows = spec.out_hw * spec.out_hw
 
-    mapping = map_layer(layer.pattern_bits, config, spec.kernel_size)
+    mapping = map_layer(layer.pattern_bits, config, spec.kernel_size,
+                        block_order)
     sched_ours = pattern_ou_schedule(mapping)
-    naive = map_layer_naive(spec.c_out, spec.c_in, spec.kernel_size, config)
+    naive = map_layer_naive(spec.c_out, spec.c_in, spec.kernel_size,
+                            naive_config if naive_config is not None
+                            else config)
     sched_nv = naive_ou_schedule(naive)
     stream = build_index_stream(mapping)
     idx = index_overhead_bits(stream)
@@ -278,8 +301,63 @@ def simulate_layer_multi(
             stored_kernels=mapping.stored_kernels,
             total_kernels=mapping.total_kernels,
             utilization=mapping.utilization,
+            naive_area_cells=naive.cells_total,
+            ours_area_cells=mapping.cells_total,
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# mapping cost model (design-space search)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCost:
+    """Predicted hardware cost of one :class:`MappingCandidate`.
+
+    Produced by :func:`mapping_cost` through the *same* pricing chain as
+    :func:`simulate_layer_multi` (``map_layer`` → ``pattern_ou_schedule``
+    → ``_sched_energy_cycles``), so every number here equals the
+    simulator's no-skip pricing of the realized mapping bit-for-bit —
+    the property suite asserts zero drift, not a tolerance.
+    """
+
+    crossbars: int
+    area_cells: int
+    energy_pj: float
+    cycles: float
+    utilization: float
+
+
+def mapping_cost(
+    pattern_bits: np.ndarray,
+    candidate: MappingCandidate,
+    windows: int,
+    kernel_size: int = 9,
+    energy: EnergyModel = EnergyModel(),
+) -> MappingCost:
+    """Price ``candidate`` on a layer's pattern bits without skipping.
+
+    This is the pure cost model the mapping search minimizes.  It is the
+    no-skip (upper bound) pricing: search must not depend on activation
+    statistics, which vary per served batch, or the chosen mapping would
+    not be a compile-time constant.
+    """
+    cfg = candidate.crossbar_config()
+    mapping = map_layer(pattern_bits, cfg, kernel_size,
+                        candidate.block_order)
+    sched = pattern_ou_schedule(mapping)
+    e, cyc, _ = _sched_energy_cycles(
+        sched, np.zeros(len(sched)), windows, energy
+    )
+    return MappingCost(
+        crossbars=mapping.num_crossbars,
+        area_cells=mapping.cells_total,
+        energy_pj=e,
+        cycles=cyc,
+        utilization=mapping.utilization,
+    )
 
 
 def drift_table(

@@ -34,13 +34,20 @@ import numpy as np
 from repro.obs.trace import NULL_TRACER
 
 __all__ = [
+    "REORDERS",
     "BlockPatternWeight",
     "build_block_pattern",
     "nonzero_block_masks",
+    "reorder_columns",
+    "predicted_tile_nnz",
     "pattern_spmm_xla",
     "pattern_spmm_xla_quant",
     "block_density",
 ]
+
+# column-reorder strategies build_block_pattern understands; the mapping
+# optimizer (core/mapsearch.py) searches over them, V205 validates tags
+REORDERS = ("pattern", "similarity", "hybrid")
 
 
 @dataclasses.dataclass
@@ -145,6 +152,93 @@ def _project_masks_to_dictionary(
     return cand[choice]
 
 
+def _mask_similarity_rank(uniq: np.ndarray) -> np.ndarray:
+    """Greedy nearest-neighbour chain over unique block masks.
+
+    ``uniq``: [U, nB] bool, lexicographically sorted (``np.unique`` rows).
+    Starts from the heaviest mask (ties: first in lexicographic order)
+    and repeatedly appends the unvisited mask with the greatest overlap
+    with the current one (ties: smaller symmetric difference, then
+    lexicographic position).  Adjacent-similar masks shrink each tile's
+    block-mask union, i.e. the number of stored bricks.  Returns the
+    chain rank per unique mask; deterministic for a given input.
+    """
+    u = np.asarray(uniq, bool)
+    n = u.shape[0]
+    rank = np.zeros(n, np.int64)
+    if n == 0:
+        return rank
+    remaining = list(range(n))
+    cur = int(np.argmax(u.sum(1)))  # argmax -> first max: deterministic
+    for step in range(n):
+        rank[cur] = step
+        remaining.remove(cur)
+        if not remaining:
+            break
+        inter = (u[remaining] & u[cur]).sum(1)
+        xor = (u[remaining] ^ u[cur]).sum(1)
+        # lexicographically smallest (-overlap, distance, position)
+        best = min(range(len(remaining)),
+                   key=lambda j: (-int(inter[j]), int(xor[j]), remaining[j]))
+        cur = remaining[best]
+    return rank
+
+
+def reorder_columns(masks: np.ndarray, strategy: str = "pattern") -> np.ndarray:
+    """Column permutation grouping equal block masks (kernel reordering).
+
+    Returns ``new_order`` (int32 [N], new position -> original column).
+    Every strategy groups equal-mask columns adjacently — only the order
+    of the *groups* differs, so the compressed operand stays exact and
+    the inverse permutation restores the original semantics:
+
+      'pattern'    — groups in lexicographic mask order (the paper's
+                     kernel reordering; the historical default).
+      'similarity' — groups along a greedy bit-overlap chain
+                     (``_mask_similarity_rank``): neighbouring tiles share
+                     blocks, minimizing each tile's mask union.
+      'hybrid'     — mask weight (set-bit count) descending first,
+                     similarity-chain rank within equal weights.
+    """
+    masks = np.asarray(masks, bool)
+    if masks.ndim != 2:
+        raise ValueError(f"masks must be [N, n_blocks], got {masks.shape}")
+    if strategy == "pattern":
+        mask_keys = np.array([m.tobytes() for m in masks])
+        return np.argsort(mask_keys, kind="stable").astype(np.int32)
+    if strategy not in REORDERS:
+        raise ValueError(f"unknown reorder strategy {strategy!r}")
+    if masks.shape[0] == 0:
+        return np.zeros(0, np.int32)
+    uniq, inverse = np.unique(masks, axis=0, return_inverse=True)
+    chain = _mask_similarity_rank(uniq)
+    if strategy == "similarity":
+        rank = chain
+    else:  # hybrid
+        order_u = np.lexsort((chain, -uniq.sum(1)))
+        rank = np.empty(len(uniq), np.int64)
+        rank[order_u] = np.arange(len(uniq))
+    return np.argsort(rank[inverse.reshape(-1)], kind="stable").astype(
+        np.int32
+    )
+
+
+def predicted_tile_nnz(
+    masks: np.ndarray, new_order: np.ndarray, tile: int
+) -> np.ndarray:
+    """Per-tile stored-brick counts a reorder would realize, without
+    building the operand: exactly the ``nnz`` ``build_block_pattern``
+    computes for the same ``masks``/``new_order`` (the cost model's
+    brick predictor — property-tested to be drift-free)."""
+    ms = np.asarray(masks, bool)[np.asarray(new_order)]
+    n, nb = ms.shape
+    if n % tile:
+        raise ValueError(f"N={n} not divisible by tile={tile}")
+    return ms.reshape(n // tile, tile, nb).any(axis=1).sum(-1).astype(
+        np.int32
+    )
+
+
 def nonzero_block_masks(w: np.ndarray, block: int) -> np.ndarray:
     """Exact per-column block masks from the nonzero structure of ``w``.
 
@@ -168,6 +262,7 @@ def build_block_pattern(
     tile: int = 128,
     masks: np.ndarray | None = None,
     tracer=None,
+    reorder: str = "pattern",
 ) -> BlockPatternWeight:
     """Pattern-prune + reorder + compress a dense [K, N] weight.
 
@@ -185,6 +280,12 @@ def build_block_pattern(
     ``prune`` (mask projection), ``reorder`` (column permutation),
     ``pack`` (zero compression into bricks) — under the ``compile``
     category; ``None`` records nothing.
+
+    ``reorder`` selects the column-permutation strategy
+    (:func:`reorder_columns`).  All strategies produce the same
+    ``BlockPatternWeight`` contract and identical semantics (the stored
+    inverse permutation undoes the layout); they differ only in how many
+    bricks the tiles need.
     """
     tracer = tracer or NULL_TRACER
     w = np.asarray(w, np.float32)
@@ -208,10 +309,10 @@ def build_block_pattern(
                 f"masks shape {masks.shape} != (N={n_out}, K/block={nb})"
             )
 
-    # kernel reordering: group equal masks (lexicographic by mask bytes)
-    with tracer.span("reorder", cat="compile", n_out=n_out):
-        mask_keys = np.array([m.tobytes() for m in masks])
-        new_order = np.argsort(mask_keys, kind="stable").astype(np.int32)
+    # kernel reordering: group equal masks; the strategy orders the groups
+    with tracer.span("reorder", cat="compile", n_out=n_out,
+                     strategy=reorder):
+        new_order = reorder_columns(masks, reorder)
         inv_order = np.argsort(new_order).astype(np.int32)
         masks_sorted = masks[new_order]
         w_sorted = w[:, new_order]

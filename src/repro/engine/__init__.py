@@ -48,6 +48,41 @@ tracer; the jitted forward is byte-identical either way).
   Prometheus text exposition for scraping.  Process-global metrics live
   in ``repro.obs.get_registry()`` (resettable for test isolation).
 
+Mapping optimization
+--------------------
+``compile_network(optimize='auto')`` (or ``optimize=MappingSearchConfig(
+...)``) runs the per-layer mapping design-space search
+(``core/mapsearch.py``) before lowering each conv: a seeded greedy
+descent with restarts over crossbar dims x packing order
+(``block_order``) x column-reorder strategy, priced by the simulator's
+own cost chain (``core/simulator.mapping_cost``) so the predicted
+area/energy/cycles equal ``hardware_report`` numbers exactly.  Selection
+is Pareto-guarded — the chosen candidate is never worse than the fixed
+paper scheme on *both* crossbar area-cells and energy, falling back to
+the fixed scheme on ties — and fully deterministic for a given seed.
+How it composes:
+
+* **precision=** — the search prices the cell-slice count the program
+  actually stores (int8 -> ``ceil(8 / cell_bits)`` cells/weight, fp32 ->
+  the crossbar model default), so a quantized program's searched area is
+  the quantized area.  Note int8 logits are only tolerance-equal across
+  reorder strategies: per-brick quantization scales depend on column
+  grouping.  fp32 logits are bit-identical — reordering changes layout,
+  never semantics.
+* **verify=** — searched programs pass the same static verifier;
+  the candidate itself is checked by rules V205 (strategy tags) and
+  V206 (geometry consistent with the packed operands).
+* **partitioning / sharded execution** — the searched reorder produces
+  the same ``BlockPatternWeight`` contract, so ``partition_network``
+  and the mesh executor apply unchanged.
+* **serialization** — the chosen ``MappingCandidate`` per conv and the
+  FC reorder tag ride in the manifest (format v3; v1/v2 programs load
+  as the fixed scheme) and ``hardware_report`` prices each layer at its
+  stored candidate after reload.
+* **tracing** — each layer's search lands as a ``search:<name>``
+  compile span carrying evaluations / chosen candidate / area-vs-fixed,
+  next to the ``lower:<name>`` spans.
+
 Verification
 ------------
 ``repro.analysis`` statically checks compiled programs — pure numpy
@@ -94,10 +129,17 @@ from repro.engine.partition import (
     partition_network,
     tile_assignment,
 )
+from repro.core.mapping import MappingCandidate
+from repro.core.mapsearch import (
+    MappingSearchConfig,
+    MappingSearchResult,
+    search_layer_mapping,
+)
 from repro.engine.lowering import (
     PRECISIONS,
     EngineConfig,
     compile_network,
+    conv_mapping_search,
     lower_conv,
     lower_fc,
     lower_matrix,
@@ -116,9 +158,14 @@ __all__ = [
     "PRECISIONS",
     "EngineConfig",
     "compile_network",
+    "conv_mapping_search",
     "lower_conv",
     "lower_fc",
     "lower_matrix",
+    "MappingCandidate",
+    "MappingSearchConfig",
+    "MappingSearchResult",
+    "search_layer_mapping",
     "CompiledConv",
     "CompiledFC",
     "CompiledNetwork",

@@ -21,8 +21,15 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.mapping import CrossbarConfig, MappingCandidate
+from repro.core.mapsearch import (
+    MappingSearchConfig,
+    MappingSearchResult,
+    choose_fc_reorder,
+    search_layer_mapping,
+)
 from repro.core.patterns import kernel_masks, masks_to_bits
-from repro.core.quantize import quantize_bp
+from repro.core.quantize import n_cell_slices, quantize_bp
 from repro.core.sparse import (
     BlockPatternWeight,
     build_block_pattern,
@@ -33,7 +40,7 @@ from repro.models.cnn import CNNConfig
 from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = ["EngineConfig", "PRECISIONS", "lower_matrix", "lower_conv",
-           "lower_fc", "compile_network"]
+           "lower_fc", "conv_mapping_search", "compile_network"]
 
 PRECISIONS = ("fp32", "int8")
 
@@ -92,11 +99,15 @@ def conv_matrix(w: np.ndarray) -> np.ndarray:
 
 def lower_matrix(
     wm: np.ndarray, block: int, tile: int, precision: str = "fp32",
-    tracer: Tracer | None = None,
+    tracer: Tracer | None = None, reorder: str = "pattern",
 ) -> BlockPatternWeight:
     """Pad a dense [K, N] matrix to (block, tile) multiples and compress it
     losslessly from its nonzero structure; ``precision='int8'`` then
     quantizes the compressed bricks (``core/quantize.quantize_bp``).
+
+    ``reorder`` selects the column-permutation strategy
+    (``core/sparse.REORDERS``); every strategy yields the same semantics
+    through the stored inverse permutation.
 
     With a ``tracer`` the lowering phases land as ``compile``-category
     spans: ``prune`` (nonzero-structure mask discovery), ``reorder`` +
@@ -110,7 +121,7 @@ def lower_matrix(
     with tracer.span("prune", cat="compile", shape=list(wp.shape)):
         masks = nonzero_block_masks(wp, block)
     bp = build_block_pattern(wp, block=block, tile=tile, masks=masks,
-                             tracer=tracer)
+                             tracer=tracer, reorder=reorder)
     if precision == "int8":
         with tracer.span("quantize", cat="compile", shape=list(wp.shape)):
             bp = quantize_bp(bp)
@@ -126,6 +137,7 @@ def lower_conv(
     pool_after: bool,
     ecfg: EngineConfig,
     tracer: Tracer | None = None,
+    mapping: MappingCandidate | None = None,
 ) -> CompiledConv:
     w = np.asarray(w, np.float32)
     c_out, c_in, kh, kw = w.shape
@@ -133,6 +145,7 @@ def lower_conv(
         raise ValueError(f"{name}: non-square kernel {kh}x{kw}")
     if pattern_bits is None:
         pattern_bits = masks_to_bits(kernel_masks(w))
+    reorder = mapping.reorder if mapping is not None else "pattern"
     return CompiledConv(
         name=name,
         c_in=c_in,
@@ -141,15 +154,16 @@ def lower_conv(
         out_hw=out_hw,
         pool_after=pool_after,
         bp=lower_matrix(conv_matrix(w), ecfg.block, ecfg.tile,
-                        ecfg.precision, tracer=tracer),
+                        ecfg.precision, tracer=tracer, reorder=reorder),
         bias=np.asarray(b, np.float32).copy(),
         pattern_bits=np.asarray(pattern_bits, np.int64).copy(),
+        mapping=mapping,
     )
 
 
 def lower_fc(
     w: np.ndarray, b: np.ndarray, ecfg: EngineConfig,
-    tracer: Tracer | None = None,
+    tracer: Tracer | None = None, reorder: str = "pattern",
 ) -> CompiledFC:
     w = np.asarray(w, np.float32)
     d_in, d_out = w.shape
@@ -157,8 +171,63 @@ def lower_fc(
         d_in=d_in,
         d_out=d_out,
         bp=lower_matrix(w, ecfg.block, ecfg.tile, ecfg.precision,
-                        tracer=tracer),
+                        tracer=tracer, reorder=reorder),
         bias=np.asarray(b, np.float32).copy(),
+        reorder=reorder,
+    )
+
+
+def _fixed_candidate(ecfg: EngineConfig) -> MappingCandidate:
+    """The fixed scheme a search must match-or-beat: the paper's default
+    geometry, with cells/weight derived from the program's precision the
+    same way ``hardware_report`` derives it."""
+    base = CrossbarConfig()
+    cells = (
+        n_cell_slices(ecfg.cell_bits)
+        if ecfg.precision == "int8"
+        else base.cells_per_weight
+    )
+    return MappingCandidate(
+        rows=base.rows,
+        cols=base.cols,
+        cells_per_weight=cells,
+        ou_rows=base.ou_rows,
+        ou_cols=base.ou_cols,
+    )
+
+
+def conv_mapping_search(
+    w: np.ndarray,
+    pattern_bits: np.ndarray | None,
+    out_hw: int,
+    ecfg: EngineConfig = EngineConfig(),
+    search: MappingSearchConfig | None = None,
+) -> MappingSearchResult:
+    """Run the mapping design-space search for one conv layer.
+
+    Builds exactly the search inputs ``compile_network(optimize=...)``
+    uses — the layer's pattern bits, the padded matmul view's block
+    masks, the precision-derived fixed scheme — and returns the full
+    :class:`~repro.core.mapsearch.MappingSearchResult` (benchmarks call
+    this standalone to time the search and check determinism against the
+    compiled program).
+    """
+    w = np.asarray(w, np.float32)
+    if pattern_bits is None:
+        pattern_bits = masks_to_bits(kernel_masks(w))
+    kernel_size = w.shape[2] * w.shape[3]
+    wp = _pad_axis(
+        _pad_axis(conv_matrix(w), 0, ecfg.block), 1, ecfg.tile
+    )
+    masks = nonzero_block_masks(wp, ecfg.block)
+    return search_layer_mapping(
+        np.asarray(pattern_bits, np.int64),
+        kernel_size=kernel_size,
+        windows=out_hw * out_hw,
+        fixed=_fixed_candidate(ecfg),
+        search=search,
+        masks=masks,
+        tile=ecfg.tile,
     )
 
 
@@ -170,6 +239,7 @@ def compile_network(
     precision: str | None = None,
     tracer: Tracer | None = None,
     verify: str | None = None,
+    optimize: "str | MappingSearchConfig | None" = None,
 ) -> CompiledNetwork:
     """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
 
@@ -191,10 +261,29 @@ def compile_network(
         :class:`~repro.analysis.diagnostics.VerificationError` on any
         error diagnostic, ``'warn'`` emits a Python warning instead,
         ``None`` (default) skips the pass on this hot compile path.
+      optimize: per-layer mapping design-space search
+        (``core/mapsearch.py``) — ``'auto'`` uses the default
+        :class:`~repro.core.mapsearch.MappingSearchConfig`, or pass a
+        config to pick axes/seed/budget; ``None`` (default) keeps the
+        fixed paper scheme.  The chosen candidates ride on
+        ``CompiledConv.mapping`` (priced by ``hardware_report``, saved in
+        manifest v3) and each layer's search lands as a
+        ``search:<name>`` compile span.
     """
     if verify not in (None, "warn", "strict"):
         raise ValueError(
             f"verify must be None, 'warn' or 'strict', got {verify!r}"
+        )
+    if isinstance(optimize, MappingSearchConfig):
+        search_cfg = optimize
+    elif optimize == "auto":
+        search_cfg = MappingSearchConfig()
+    elif optimize is None:
+        search_cfg = None
+    else:
+        raise ValueError(
+            f"optimize must be None, 'auto' or a MappingSearchConfig, "
+            f"got {optimize!r}"
         )
     if precision is not None:
         ecfg = dataclasses.replace(ecfg, precision=precision)
@@ -205,10 +294,26 @@ def compile_network(
     with tracer.span(
         "compile_network", cat="compile",
         layers=cfg.num_convs + 1, precision=ecfg.precision,
+        optimize=search_cfg is not None,
     ):
         for i in range(1, cfg.num_convs + 1):
             name = f"conv{i}"
             pool = i in cfg.pool_after
+            mapping = None
+            if search_cfg is not None:
+                with tracer.span(f"search:{name}", cat="compile") as sp:
+                    res = conv_mapping_search(
+                        params[name]["w"], pattern_bits.get(name), hw,
+                        ecfg, search_cfg,
+                    )
+                    mapping = res.chosen
+                    sp.args.update(
+                        evaluations=res.evaluations,
+                        improved=res.improved,
+                        chosen=mapping.to_manifest(),
+                        area_cells=res.cost.area_cells,
+                        fixed_area_cells=res.fixed_cost.area_cells,
+                    )
             with tracer.span(f"lower:{name}", cat="compile"):
                 convs.append(
                     lower_conv(
@@ -220,13 +325,29 @@ def compile_network(
                         pool_after=pool,
                         ecfg=ecfg,
                         tracer=tracer,
+                        mapping=mapping,
                     )
                 )
             if pool:
                 hw //= 2
+        fc_reorder = "pattern"
+        if search_cfg is not None:
+            with tracer.span("search:fc", cat="compile") as sp:
+                wfc = _pad_axis(
+                    _pad_axis(
+                        np.asarray(params["fc"]["w"], np.float32),
+                        0, ecfg.block,
+                    ),
+                    1, ecfg.tile,
+                )
+                fc_reorder, counts = choose_fc_reorder(
+                    nonzero_block_masks(wfc, ecfg.block),
+                    ecfg.tile, search_cfg.reorders,
+                )
+                sp.args.update(chosen=fc_reorder, bricks=counts)
         with tracer.span("lower:fc", cat="compile"):
             fc = lower_fc(params["fc"]["w"], params["fc"]["b"], ecfg,
-                          tracer=tracer)
+                          tracer=tracer, reorder=fc_reorder)
     program = CompiledNetwork(
         config=cfg, convs=convs, fc=fc, block=ecfg.block, tile=ecfg.tile,
         precision=ecfg.precision, cell_bits=ecfg.cell_bits,

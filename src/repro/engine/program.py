@@ -19,7 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.crossbar import EnergyModel
-from repro.core.mapping import CrossbarConfig
+from repro.core.mapping import CrossbarConfig, MappingCandidate
 from repro.core.quantize import WEIGHT_BITS, n_cell_slices
 from repro.core.patterns import PatternDict
 from repro.core.simulator import drift_table, simulate_layer_multi
@@ -39,6 +39,13 @@ class CompiledConv:
     ``c_in * kernel**2`` to ``bp.k_in`` rows, outputs padded from ``c_out``
     to ``bp.n_out`` columns (the executor slices the first ``c_out`` back
     out after the inverse permutation).
+
+    ``mapping`` (optional) is the searched per-layer crossbar mapping
+    (``compile_network(optimize=...)``, ``core/mapsearch.py``):
+    ``hardware_report`` prices the layer at that candidate's geometry and
+    packing order instead of the report-wide defaults.  ``None`` (the
+    fixed scheme, and every v1/v2-loaded program) keeps the historical
+    pricing.
     """
 
     name: str
@@ -50,6 +57,7 @@ class CompiledConv:
     bp: BlockPatternWeight
     bias: np.ndarray  # [c_out]
     pattern_bits: np.ndarray  # [c_out, c_in] packed kernel patterns
+    mapping: MappingCandidate | None = None
 
     @property
     def k_unpadded(self) -> int:
@@ -58,12 +66,18 @@ class CompiledConv:
 
 @dataclasses.dataclass
 class CompiledFC:
-    """The FC head lowered onto the same compressed-spmm path."""
+    """The FC head lowered onto the same compressed-spmm path.
+
+    ``reorder`` records the column-reorder strategy the head was lowered
+    with (``core/sparse.REORDERS``) — the FC has no crossbar mapping, so
+    its searchable space is the reorder alone.
+    """
 
     d_in: int
     d_out: int
     bp: BlockPatternWeight
     bias: np.ndarray  # [d_out]
+    reorder: str = "pattern"
 
 
 @dataclasses.dataclass
@@ -285,6 +299,16 @@ class CompiledNetwork:
         ``n_chips=None`` the view is derived from ``self.partition`` when
         the program carries one (model shards x data replicas).
 
+        Mapping: a searched program (``compile_network(optimize=...)``)
+        carries a per-layer :class:`~repro.core.mapping.MappingCandidate`
+        — those layers are priced at their candidate's crossbar geometry
+        and packing order (exactly the ``core/simulator.mapping_cost``
+        numbers the search minimized) while the naive baseline stays at
+        the reference ``config``.  The ``mapping`` section lists the
+        per-layer candidates and the FC reorder; ``area_cells`` /
+        ``naive_area_cells`` total crossbar area in *cells*, the unit
+        that stays comparable when layers sit on different crossbar dims.
+
         Cell precision: for an int8 program the crossbar model's
         ``cells_per_weight`` is overridden with the cell-slice count the
         stored weights actually occupy (``ceil(8 / cell_bits)``) — the
@@ -313,7 +337,10 @@ class CompiledNetwork:
             default=0,
         )
 
-        # one mapping pass per layer, priced under every requested source
+        # one mapping pass per layer, priced under every requested source;
+        # a searched layer is priced at its own candidate geometry and
+        # packing order, while the naive baseline stays at the reference
+        # ``config`` so area ratios compare against the same yardstick
         layers, assumed, measured = [], [], []
         for c, layer in zip(self.convs, syn):
             sources = {"noskip": None}
@@ -321,7 +348,13 @@ class CompiledNetwork:
                 sources["assumed"] = float(assumed_skip)
             if c.name in dists:
                 sources["measured"] = dists[c.name]
-            priced = simulate_layer_multi(layer, sources, config, energy)
+            if c.mapping is not None:
+                priced = simulate_layer_multi(
+                    layer, sources, c.mapping.crossbar_config(), energy,
+                    block_order=c.mapping.block_order, naive_config=config,
+                )
+            else:
+                priced = simulate_layer_multi(layer, sources, config, energy)
             layers.append(priced["noskip"])
             assumed.append(priced.get("assumed"))
             measured.append(priced.get("measured", priced["noskip"])
@@ -338,6 +371,8 @@ class CompiledNetwork:
                 "name": r.name,
                 "crossbars": r.ours_crossbars,
                 "naive_crossbars": r.naive_crossbars,
+                "area_cells": r.ours_area_cells,
+                "naive_area_cells": r.naive_area_cells,
                 "energy_pj": r.ours_energy_pj,
                 "cycles": r.ours_cycles,
                 "utilization": r.utilization,
@@ -357,12 +392,26 @@ class CompiledNetwork:
             "layers": layer_rows,
             "crossbars": int(tot(layers, "ours_crossbars")),
             "naive_crossbars": int(tot(layers, "naive_crossbars")),
+            # area in *cells*: the comparable total once searched layers
+            # sit on per-layer crossbar dims (a 128x128 crossbar is not a
+            # 512x512, so raw crossbar counts stop being commensurable)
+            "area_cells": int(tot(layers, "ours_area_cells")),
+            "naive_area_cells": int(tot(layers, "naive_area_cells")),
             "area_efficiency": tot(layers, "naive_crossbars")
             / max(tot(layers, "ours_crossbars"), 1.0),
             "energy_pj": tot(layers, "ours_energy_pj"),
             "naive_energy_pj": tot(layers, "naive_energy_pj"),
             "cycles": tot(layers, "ours_cycles"),
             "index_kb": tot(layers, "index_bits") / 8.0 / 1024.0,
+        }
+        rep["mapping"] = {
+            "optimized": any(c.mapping is not None for c in self.convs),
+            "per_layer": {
+                c.name: (None if c.mapping is None
+                         else c.mapping.to_manifest())
+                for c in self.convs
+            },
+            "fc_reorder": self.fc.reorder,
         }
         rep["precision"] = {
             "weights": self.precision,

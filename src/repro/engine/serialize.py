@@ -10,7 +10,12 @@ streams as int32/int64).  A ``CompiledNetwork.partition``
 (``engine/partition.py``) rides along in the manifest, so a program
 partitioned for an N-chip mesh reloads ready to serve from one; the
 stored ``precision`` / ``cell_bits`` reload the same way (format v2 —
-v1 programs load as fp32).
+v1 programs load as fp32).  Format v3 adds the searched mapping
+metadata: an optional per-conv ``mapping``
+(:meth:`~repro.core.mapping.MappingCandidate.to_manifest`) and the FC
+``reorder`` tag — v1/v2 programs load with no mapping and the
+'pattern' reorder (the fixed scheme), so old artifacts keep their
+historical pricing.
 """
 
 from __future__ import annotations
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.diagnostics import ProgramFormatError
+from repro.core.mapping import MappingCandidate
 from repro.core.sparse import BlockPatternWeight
 from repro.engine.partition import NetworkPartition
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
@@ -37,8 +43,10 @@ __all__ = [
 ]
 
 _MANIFEST = "program.json"
-_FORMAT_VERSION = 2  # v2 adds precision/cell_bits + per-bp w_scales
-_SUPPORTED_VERSIONS = (1, 2)
+# v2 adds precision/cell_bits + per-bp w_scales; v3 adds per-conv
+# mapping candidates + the fc reorder tag
+_FORMAT_VERSION = 3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 
 
 def _save_array(directory: str, name: str, arr) -> str:
@@ -128,6 +136,9 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
                     tmp, f"{c.name}.pattern_bits", c.pattern_bits
                 ),
                 "bp": _bp_manifest(c.name, c.bp, tmp),
+                "mapping": (
+                    None if c.mapping is None else c.mapping.to_manifest()
+                ),
             }
         )
     manifest["fc"] = {
@@ -135,6 +146,7 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
         "d_out": program.fc.d_out,
         "bias": _save_array(tmp, "fc.bias", program.fc.bias),
         "bp": _bp_manifest("fc", program.fc.bp, tmp),
+        "reorder": program.fc.reorder,
     }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -192,6 +204,8 @@ _CONFIG_KEYS = ("conv_channels", "pool_after", "num_classes", "input_hw",
                 "kernel")
 _CONV_KEYS = ("name", "c_in", "c_out", "kernel", "out_hw", "pool_after",
               "bias", "pattern_bits", "bp")
+_MAPPING_KEYS = ("rows", "cols", "cells_per_weight", "ou_rows", "ou_cols",
+                 "block_order", "reorder")
 
 
 def _require(entry: dict, keys, where: str) -> None:
@@ -201,6 +215,35 @@ def _require(entry: dict, keys, where: str) -> None:
             f"program manifest {where} is missing key(s) "
             f"{', '.join(missing)}", rule="M003"
         )
+
+
+def _check_mapping_entry(entry, where: str) -> None:
+    """Structural (M003) check of a v3 ``mapping`` entry.
+
+    Only types and keys are checked here — *validity* of the tags and
+    dims against the packed operands is the static verifier's job
+    (V205/V206), so a structurally sound but semantically corrupt save
+    surfaces as a diagnostic after load, not a format error."""
+    if entry is None:
+        return
+    if not isinstance(entry, dict):
+        raise ProgramFormatError(
+            f"program manifest {where} must be an object or null",
+            rule="M003",
+        )
+    _require(entry, _MAPPING_KEYS, where)
+    for k in ("rows", "cols", "cells_per_weight", "ou_rows", "ou_cols"):
+        if not isinstance(entry[k], int) or isinstance(entry[k], bool):
+            raise ProgramFormatError(
+                f"program manifest {where}.{k} must be an integer",
+                rule="M003",
+            )
+    for k in ("block_order", "reorder"):
+        if not isinstance(entry[k], str):
+            raise ProgramFormatError(
+                f"program manifest {where}.{k} must be a string",
+                rule="M003",
+            )
 
 
 def _check_bp_entry(entry: dict, directory: str, where: str) -> None:
@@ -269,12 +312,17 @@ def validate_manifest(manifest: dict, directory: str) -> None:
                     f"{fname!r}", rule="M004"
                 )
         _check_bp_entry(e["bp"], directory, f"{where}.bp")
+        _check_mapping_entry(e.get("mapping"), f"{where}.mapping")
     fce = manifest["fc"]
     if not isinstance(fce, dict):
         raise ProgramFormatError(
             "program manifest fc must be an object", rule="M003"
         )
     _require(fce, ("d_in", "d_out", "bias", "bp"), "fc")
+    if not isinstance(fce.get("reorder", "pattern"), str):
+        raise ProgramFormatError(
+            "program manifest fc.reorder must be a string", rule="M003"
+        )
     fname = fce["bias"]
     if not isinstance(fname, str) or not os.path.exists(
         os.path.join(directory, fname)
@@ -327,6 +375,11 @@ def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
                 pattern_bits=np.load(
                     os.path.join(directory, e["pattern_bits"])
                 ),
+                mapping=(
+                    MappingCandidate.from_manifest(e["mapping"])
+                    if e.get("mapping") is not None
+                    else None
+                ),
             )
             for e in manifest["convs"]
         ]
@@ -336,6 +389,7 @@ def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
             d_out=fce["d_out"],
             bp=_load_bp(fce["bp"], directory),
             bias=np.load(os.path.join(directory, fce["bias"])),
+            reorder=str(fce.get("reorder", "pattern")),
         )
     except (OSError, ValueError) as e:
         raise ProgramFormatError(

@@ -29,6 +29,7 @@ from repro.core.pruning import (
     magnitude_prune,
     project_params,
 )
+from repro.core.patterns import ALL_ZERO, pattern_sizes
 from repro.engine import compile_network, partition_network
 from repro.engine.lowering import EngineConfig
 from repro.engine.partition import NetworkPartition, pad_bp_tiles
@@ -355,6 +356,101 @@ def test_compile_network_verify_modes(pruned):
 
 
 # ---------------------------------------------------------------------------
+# searched-mapping mutations (V205/V206)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def prog_auto(pruned):
+    cfg, params, bits = pruned
+    return compile_network(cfg, params, bits,
+                           ecfg=EngineConfig(block=16, tile=16),
+                           optimize="auto")
+
+
+def _with_mapping(prog, **kw):
+    """First conv's mapping candidate with fields overridden."""
+    conv0 = prog.convs[0]
+    assert conv0.mapping is not None
+    mapped = dataclasses.replace(conv0.mapping, **kw)
+    conv0 = dataclasses.replace(conv0, mapping=mapped)
+    return dataclasses.replace(prog, convs=[conv0] + prog.convs[1:])
+
+
+def test_pristine_searched_program_verifies_clean(prog_auto):
+    assert all(c.mapping is not None for c in prog_auto.convs)
+    report = verify_network(prog_auto)
+    assert report.ok, report.format()
+
+
+MAPPING_MUTATIONS = [
+    ("bad-block-order-tag", dict(block_order="bogus"), {"V205"}),
+    ("bad-reorder-tag", dict(reorder="zigzag"), {"V205"}),
+    ("non-positive-rows", dict(rows=0), {"V205"}),
+    ("non-positive-ou-cols", dict(ou_cols=-8), {"V205"}),
+    ("ou-taller-than-crossbar", dict(ou_rows=4096, rows=512), {"V206"}),
+    ("ou-wider-than-crossbar", dict(ou_cols=4096, cols=512), {"V206"}),
+    ("cells-exceed-row", dict(cells_per_weight=10**6), {"V206"}),
+]
+
+
+@pytest.mark.parametrize(
+    "name,fields,expected",
+    MAPPING_MUTATIONS,
+    ids=[m[0] for m in MAPPING_MUTATIONS],
+)
+def test_mapping_mutation_flags_rule(prog_auto, name, fields, expected):
+    prog = _with_mapping(prog_auto, **fields)
+    report = verify_network(prog)
+    assert report.rules("error") == expected, report.format()
+    assert all(d.layer == "conv1" for d in report.errors)
+
+
+def test_mapping_ou_cannot_hold_tallest_pattern(prog_auto):
+    """ou_rows below the layer's tallest pattern block is unrealizable:
+    pattern_ou_schedule never splits a block across OU row groups."""
+    bits = np.asarray(prog_auto.convs[0].pattern_bits)
+    max_h = int(pattern_sizes(bits)[bits != ALL_ZERO].max())
+    assert max_h >= 2, "fixture needs a pattern taller than one row"
+    prog = _with_mapping(prog_auto, ou_rows=max_h - 1)
+    report = verify_network(prog)
+    assert report.rules("error") == {"V206"}, report.format()
+
+
+def test_mapping_int8_cell_slice_mismatch(pruned):
+    cfg, params, bits = pruned
+    prog = compile_network(cfg, params, bits,
+                           ecfg=EngineConfig(block=16, tile=16),
+                           precision="int8", optimize="auto")
+    assert verify_network(prog).ok
+    bad = _with_mapping(prog, cells_per_weight=1)
+    report = verify_network(bad)
+    assert report.rules("error") == {"V206"}, report.format()
+    assert any("cell-slice" in d.message for d in report.errors)
+
+
+def test_fc_reorder_bad_tag(prog_auto):
+    fc = dataclasses.replace(prog_auto.fc, reorder="bogus")
+    prog = dataclasses.replace(prog_auto, fc=fc)
+    report = verify_network(prog)
+    assert report.rules("error") == {"V205"}, report.format()
+    assert all(d.layer == "fc" for d in report.errors)
+
+
+def test_searched_program_full_pipeline_clean(prog_auto, tmp_path):
+    """compile(optimize) -> partition -> save -> load -> verify, clean at
+    every stage."""
+    prog = partition_network(prog_auto, data=2, model=2)
+    path = os.path.join(tmp_path, "prog_auto")
+    serialize.save_program(path, prog)
+    assert verify_saved(path).ok
+    loaded = serialize.load_program(path)  # verify=True default
+    assert verify_network(loaded).ok
+    assert [c.mapping for c in loaded.convs] == \
+        [c.mapping for c in prog_auto.convs]
+
+
+# ---------------------------------------------------------------------------
 # serialized programs: manifest statics + load-time verification
 # ---------------------------------------------------------------------------
 
@@ -424,6 +520,72 @@ def test_load_verifies_semantic_corruption(saved):
     prog = serialize.load_program(saved, verify=False)
     assert prog.convs
     assert verify_saved(saved).rules("error") == {"V102"}
+
+
+# ---------------------------------------------------------------------------
+# serialized mapping metadata (format v3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def saved_auto(prog_auto, tmp_path):
+    path = os.path.join(tmp_path, "prog_auto")
+    serialize.save_program(path, prog_auto)
+    return path
+
+
+def _mutate_manifest(path, fn):
+    m = _manifest(path)
+    fn(m)
+    _rewrite(path, m)
+
+
+@pytest.mark.parametrize(
+    "corrupt",
+    [
+        lambda m: m["convs"][0].__setitem__("mapping", "hybrid"),
+        lambda m: m["convs"][0]["mapping"].pop("rows"),
+        lambda m: m["convs"][0]["mapping"].__setitem__("block_order", 5),
+        lambda m: m["convs"][0]["mapping"].__setitem__("rows", True),
+        lambda m: m["fc"].__setitem__("reorder", 7),
+    ],
+    ids=["mapping-not-a-dict", "mapping-key-missing",
+         "block-order-not-a-string", "rows-bool-not-int",
+         "fc-reorder-not-a-string"],
+)
+def test_corrupt_mapping_manifest_is_structural(saved_auto, corrupt):
+    _mutate_manifest(saved_auto, corrupt)
+    with pytest.raises(ProgramFormatError) as ei:
+        serialize.load_program(saved_auto)
+    assert ei.value.rule == "M003"
+    report = verify_saved(saved_auto)
+    assert report.rules("error") == {"M003"}, report.format()
+
+
+@pytest.mark.parametrize(
+    "corrupt,rule",
+    [
+        (lambda m: m["convs"][0]["mapping"].__setitem__(
+            "block_order", "bogus"), "V205"),
+        (lambda m: m["convs"][0]["mapping"].__setitem__(
+            "reorder", "zigzag"), "V205"),
+        (lambda m: m["convs"][0]["mapping"].__setitem__(
+            "ou_cols", 4096), "V206"),
+    ],
+    ids=["stored-bad-block-order", "stored-bad-reorder",
+         "stored-ou-wider-than-crossbar"],
+)
+def test_corrupt_mapping_manifest_is_semantic(saved_auto, corrupt, rule):
+    """A type-correct but invalid stored candidate passes the structural
+    M-rules and is caught by the semantic verifier at load."""
+    _mutate_manifest(saved_auto, corrupt)
+    with pytest.raises(VerificationError) as ei:
+        serialize.load_program(saved_auto)
+    assert rule in ei.value.report.rules("error")
+    report = verify_saved(saved_auto)
+    assert report.rules("error") == {rule}, report.format()
+    # opt-out still loads the raw payload
+    assert serialize.load_program(saved_auto, verify=False).convs
 
 
 # ---------------------------------------------------------------------------

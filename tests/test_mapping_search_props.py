@@ -1,0 +1,124 @@
+"""Hypothesis properties of the mapping design-space search.
+
+Randomized over layer geometry and sparsity, the two contracts the
+deterministic suite (``tests/test_mapping_search.py``) checks on the
+smoke net must hold universally:
+
+  * every candidate the search visits induces a *bijective* column
+    permutation of the engine operands, for any reorder strategy;
+  * the search's cost model is the simulator's pricing chain — its
+    area/energy/cycles for the chosen candidate equal the
+    ``simulate_layer_multi`` numbers for the same geometry with **zero
+    tolerance** (``==`` on floats), and the Pareto guard holds.
+
+Skipped wholesale when hypothesis is not installed (it is a dev-only
+dependency; CI installs it, the bare runtime image may not).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import MappingCandidate
+from repro.core.mapsearch import MappingSearchConfig, search_layer_mapping
+from repro.core.simulator import mapping_cost, simulate_layer_multi
+from repro.core.synthetic import LayerSpec
+from repro.core.sparse import predicted_tile_nnz, reorder_columns
+
+# small geometries keep each example fast; 9-bit patterns = 3x3 kernels
+layer_params = st.builds(
+    dict,
+    c_out=st.integers(2, 12),
+    c_in=st.integers(1, 10),
+    density=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+
+
+def _random_bits(c_out, c_in, density, seed):
+    rng = np.random.default_rng(seed)
+    masks = rng.random((c_out, c_in, 9)) < density
+    weights = 1 << np.arange(9, dtype=np.int64)
+    return (masks * weights).sum(-1)
+
+
+# tiny search space per example: two dims x all orderings exercises every
+# reorder/block-order code path without pricing hundreds of candidates
+_SEARCH = MappingSearchConfig(
+    crossbar_dims=((64, 64), (32, 32)), restarts=1, max_passes=2
+)
+
+
+def _fixed_candidate():
+    return MappingCandidate(rows=64, cols=64)
+
+
+@given(layer_params)
+@settings(max_examples=30, deadline=None)
+def test_visited_reorders_bijective(p):
+    bits = _random_bits(**p)
+    # engine-side masks for a matching matmul view: [N, n_blocks]
+    rng = np.random.default_rng(p["seed"] + 1)
+    n = 16
+    masks = rng.random((n, max(p["c_in"], 1))) < 0.5
+    res = search_layer_mapping(
+        bits, fixed=_fixed_candidate(), search=_SEARCH, masks=masks, tile=8
+    )
+    assert res.evaluations == len(res.visited) >= 1
+    for cand in res.visited:
+        order = reorder_columns(masks, cand.reorder)
+        np.testing.assert_array_equal(np.sort(order), np.arange(n))
+        # the brick predictor is well-defined for the permuted masks:
+        # per-tile counts bounded by the block count, total bounded below
+        # by the union mask (a block present anywhere is stored at least
+        # once)
+        nnz = predicted_tile_nnz(masks, order, 8)
+        assert nnz.max(initial=0) <= masks.shape[1]
+        assert nnz.sum() >= masks.any(axis=0).sum()
+
+
+@given(layer_params)
+@settings(max_examples=30, deadline=None)
+def test_cost_model_equals_simulator_pricing(p):
+    """Zero-drift: for the chosen candidate, mapping_cost == the
+    simulator's full-layer pricing at the same geometry."""
+    bits = _random_bits(**p)
+    out_hw = 4
+    res = search_layer_mapping(
+        bits, windows=out_hw ** 2, fixed=_fixed_candidate(), search=_SEARCH
+    )
+    # Pareto guard holds on arbitrary layers
+    assert res.cost.area_cells <= res.fixed_cost.area_cells
+    assert res.cost.energy_pj <= res.fixed_cost.energy_pj
+
+    spec = LayerSpec("prop", p["c_in"], p["c_out"], out_hw)
+    for cand in (res.chosen, res.fixed):
+        mc = mapping_cost(bits, cand, out_hw ** 2)
+        r = simulate_layer_multi(
+            _LayerStub(spec, bits), {"noskip": None},
+            config=cand.crossbar_config(), block_order=cand.block_order,
+        )["noskip"]
+        assert mc.crossbars == r.ours_crossbars
+        assert mc.area_cells == r.ours_area_cells
+        assert mc.energy_pj == r.ours_energy_pj  # exact float equality
+        assert mc.cycles == r.ours_cycles
+
+
+class _LayerStub:
+    """The duck-typed layer simulate_layer_multi expects (only ``spec``
+    and ``pattern_bits`` are read on the pattern-pruned pricing path)."""
+
+    def __init__(self, spec, bits):
+        self.spec = spec
+        self.pattern_bits = bits
+
+
+@given(layer_params)
+@settings(max_examples=20, deadline=None)
+def test_search_deterministic_property(p):
+    bits = _random_bits(**p)
+    a = search_layer_mapping(bits, fixed=_fixed_candidate(), search=_SEARCH)
+    b = search_layer_mapping(bits, fixed=_fixed_candidate(), search=_SEARCH)
+    assert a == b
