@@ -18,6 +18,11 @@ Runs mini-CNN and VGG16 shapes on CPU, and emits a JSON report with:
     continuous-batching scheduler — requests/s, mean occupancy/latency,
     the single-trace guarantee (``trace_count``) and the exactness of the
     accumulated skip statistics vs a one-shot stats forward,
+  * an ``http_service`` entry: the same bursty trace through the
+    ``repro.serve`` asyncio HTTP front end over a real socket — req/s,
+    first-result p50/p99, mean slot occupancy (gated at >= 90%), the
+    single-trace invariant under socket-driven concurrency, and a
+    load-shedding phase whose served/shed split must conserve requests,
   * a 1-vs-N-device sharded-execution entry: the same compiled program
     run unsharded and tile/batch-sharded over a mesh of N virtualized
     host devices (subprocess, ``--xla_force_host_platform_device_count``),
@@ -53,6 +58,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import http.client
 import json
 import os
 import subprocess
@@ -75,11 +81,12 @@ from repro.core.pruning import (
 from repro.core.simulator import simulate_dataset
 from repro.core.synthetic import synthesize_network
 from repro.engine import (
-    ClassifyRequest,
+    CompileOptions,
     InferenceService,
     compile_network,
     make_forward,
 )
+from repro.serve import Request, ServingServer, classify_session
 from repro.models.cnn import (
     CNNConfig,
     cnn_apply,
@@ -122,7 +129,9 @@ def _quantized_entry(cfg, params, bits, x, fp32_fn, fp32_us, rep_fp32):
     of each sample, so int8 scale noise compounds layer over layer and
     random-init logits are near-tied to begin with.  The trained mini
     example and the smoke gate sit at 100% agreement."""
-    progq = compile_network(cfg, params, bits, precision="int8")
+    progq = compile_network(
+        cfg, params, bits, options=CompileOptions(precision="int8")
+    )
     q_fn = make_forward(progq, backend="xla")
     _, q_us = timed(lambda: jax.block_until_ready(q_fn(x)), repeats=3)
     repq = progq.hardware_report()
@@ -250,7 +259,9 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS,
     """
     cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
     params, bits = _pruned(cfg, 0.75, num_patterns=8, seed=1)
-    prog = compile_network(cfg, params, bits, tracer=tracer)
+    prog = compile_network(
+        cfg, params, bits, options=CompileOptions(tracer=tracer)
+    )
     svc = InferenceService(prog, batch_slots=batch_slots, backend="xla",
                            collect_stats=True, tracer=tracer)
     n = sum(SERVICE_BURSTS)
@@ -261,12 +272,12 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS,
 
     # warm the one trace outside the timed region, then reset the stats
     # and metrics windows so the entry describes only the bursty trace
-    svc.serve([ClassifyRequest(image=images[0])])
+    svc.serve([Request(image=images[0])])
     svc.reset_stats()
     svc.reset_metrics()
     base_batches = svc.batches_run
 
-    reqs = [ClassifyRequest(image=img) for img in images]
+    reqs = [Request(image=img) for img in images]
     it = iter(reqs)
     t0 = time.perf_counter()
     for burst in SERVICE_BURSTS:
@@ -320,6 +331,131 @@ def _service_throughput(batch_slots: int = SERVICE_SLOTS,
         rep = prog.hardware_report(skip_stats=svc.activation_stats,
                                    observed=tfwd.observed_times())
         entry["drift"] = rep["drift"]
+    return entry
+
+
+# HTTP shed phase: more one-shot admissions than queue + slots can hold,
+# so the front door must 429 some of them while serving the rest
+HTTP_SHED_SLOTS = 4
+HTTP_SHED_QUEUE = 8
+HTTP_SHED_REQUESTS = 40
+
+
+def _stream_http(host, port, payloads, timeout=600):
+    """POST /v1/stream and read the chunked NDJSON reply line by line."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request(
+            "POST", "/v1/stream",
+            json.dumps({"requests": payloads}),
+            {"Content-Type": "application/json"},
+        )
+        resp = conn.getresponse()
+        lines = []
+        while True:
+            line = resp.readline()
+            if not line:
+                break
+            lines.append(json.loads(line))
+        return resp.status, lines
+    finally:
+        conn.close()
+
+
+def _http_service_throughput(batch_slots: int = SERVICE_SLOTS) -> dict:
+    """The same bursty trace through the asyncio HTTP front end, over a
+    real socket (``repro.serve.ServingServer`` + ``/v1/stream``).
+
+    Two servers over one compiled program:
+
+      * **throughput** — all 100 requests on one streaming connection
+        with an unbounded queue; the entry records req/s, the
+        first-result SLO percentiles, mean slot occupancy (the
+        ``check_baseline.py`` gate requires >= 90% through the HTTP
+        path), and the single-trace invariant surviving socket-driven
+        concurrency;
+      * **shed** — a burst of ``HTTP_SHED_REQUESTS`` one-shot admissions
+        against a small bounded queue, so the front door must shed: the
+        entry records the served/shed split and a conservation check
+        (served + shed == submitted, every shed line a well-formed
+        overload response, nothing admitted ever dropped).  The exact
+        shed count races the worker's drain speed, so only its bounds
+        are gated.
+    """
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params, bits = _pruned(cfg, 0.75, num_patterns=8, seed=1)
+    prog = compile_network(cfg, params, bits)
+    n = sum(SERVICE_BURSTS)
+    images = np.array(jax.random.normal(
+        jax.random.PRNGKey(3), (n, cfg.conv_channels[0][0],
+                                cfg.input_hw, cfg.input_hw)
+    ), np.float32)
+    payloads = [{"image": img.tolist()} for img in images]
+
+    srv = ServingServer(
+        classify_session(prog, batch_slots=batch_slots),
+        admit_wait_s=0.02,
+    )
+    host, port = srv.start_in_thread()
+    try:
+        t0 = time.perf_counter()
+        status, lines = _stream_http(host, port, payloads)
+        dt = time.perf_counter() - t0
+        m = srv.session.metrics
+        entry = {
+            "requests": n,
+            "batch_slots": batch_slots,
+            "all_ok": (
+                status == 200
+                and len(lines) == n
+                and all(ln.get("ok") for ln in lines)
+            ),
+            "requests_per_s": n / max(dt, 1e-9),
+            "first_result_p50_s": m["first_result_p50_s"],
+            "first_result_p99_s": m["first_result_p99_s"],
+            "occupancy_mean": m["occupancy_mean"],
+            "batches_run": m["steps"],
+            "trace_count": srv.session.trace_count(),
+            "http_completed": srv.completed,
+            "meter_rate_per_s": srv.meter.rate,
+        }
+    finally:
+        srv.shutdown()
+
+    shed_srv = ServingServer(
+        classify_session(prog, batch_slots=HTTP_SHED_SLOTS,
+                         max_queue=HTTP_SHED_QUEUE),
+        admit_wait_s=0.0,
+    )
+    host, port = shed_srv.start_in_thread()
+    try:
+        status, lines = _stream_http(
+            host, port, payloads[:HTTP_SHED_REQUESTS]
+        )
+        served = [ln for ln in lines if ln.get("ok")]
+        shed = [ln for ln in lines if not ln.get("ok")]
+        sm = shed_srv.session.metrics
+        entry["shed"] = {
+            "requests": HTTP_SHED_REQUESTS,
+            "batch_slots": HTTP_SHED_SLOTS,
+            "max_queue": HTTP_SHED_QUEUE,
+            "served": len(served),
+            "shed": len(shed),
+            "trace_count": shed_srv.session.trace_count(),
+            "conservation_ok": (
+                status == 200
+                and len(served) + len(shed) == HTTP_SHED_REQUESTS
+                and len(served) == sm["completed"]
+                and sm["rejected"] == len(shed)
+                and all(
+                    ln.get("error") == "overloaded"
+                    and ln.get("retry_after_s", 0) > 0
+                    for ln in shed
+                )
+            ),
+        }
+    finally:
+        shed_srv.shutdown()
     return entry
 
 
@@ -445,8 +581,10 @@ def _mapping_model_entry(name: str, cfg, params, bits,
     fixed_compile_s = min(times)
 
     tr = Tracer()
-    prog_auto = compile_network(cfg, params, bits, optimize="auto",
-                                tracer=tr)
+    prog_auto = compile_network(
+        cfg, params, bits,
+        options=CompileOptions(optimize="auto", tracer=tr),
+    )
     search_spans = [s for s in tr.spans("compile")
                     if s.name.startswith("search:")]
     search_s = float(sum(s.dur for s in search_spans))
@@ -572,7 +710,9 @@ def _verify_overhead() -> dict:
     errors = warnings_ = 0
     for precision in ("fp32", "int8"):
         t0 = time.perf_counter()
-        prog = compile_network(cfg, params, bits, precision=precision)
+        prog = compile_network(
+            cfg, params, bits, options=CompileOptions(precision=precision)
+        )
         compile_s += time.perf_counter() - t0
         # verification is deterministic; best-of-2 removes timer noise
         # from the ratio gate
@@ -617,6 +757,7 @@ def collect(quick: bool = False, smoke: bool = False,
     report = {
         "networks": networks,
         "service": _service_throughput(tracer=tracer),
+        "http_service": _http_service_throughput(),
         "sharded": _sharded_throughput(
             n_devices=2 if smoke else (4 if quick else 8)
         ),
@@ -661,6 +802,17 @@ def run():
         f";traces={sv['trace_count']}"
         f";occupancy={sv['occupancy_mean']:.2f}"
         f";stats_exact={sv['stats_exact']}"
+    )
+    hs = report["http_service"]
+    yield (
+        f"engine_http_{hs['batch_slots']}slots,"
+        f"{hs['requests_per_s']:.1f},"
+        f"occupancy={hs['occupancy_mean']:.2f}"
+        f";p50_s={hs['first_result_p50_s']:.4f}"
+        f";p99_s={hs['first_result_p99_s']:.4f}"
+        f";traces={hs['trace_count']}"
+        f";shed={hs['shed']['shed']}"
+        f";all_ok={hs['all_ok']}"
     )
     sh = report["sharded"]
     if "error" not in sh:

@@ -37,13 +37,25 @@ deterministic (fixed arrival trace -> exact ``batches_run`` /
 must match the one-shot forward), while its wall-clock only enters
 through the loose ``overhead_vs_forward`` ratio.
 
+The ``http_service`` entry is gated absolutely (socket timing makes its
+scheduling nondeterministic, so there is no baseline row): every request
+served ok, the forward traced exactly once under socket-driven
+concurrency, mean slot occupancy >= ``HTTP_OCCUPANCY_FLOOR`` through
+the HTTP path, and the shed phase conserving requests (served + shed ==
+submitted, at least one but not all shed, nothing admitted dropped).
+
 With ``--trace FILE`` the Chrome trace-event artifact written by
 ``bench_engine --trace-out`` is validated too: it must parse, every
 event must carry the trace-event schema fields (``ph``/``ts``/``pid``/
 ``tid``/``name``, ``dur`` on complete spans), and it must contain
-compile-phase spans, per-layer executor spans, and the begin/end async
-events of all 100 bursty-trace request lifecycles.  Span *durations* are
-wall-clock and never gated — only the artifact's shape is.
+compile-phase spans, per-layer executor spans, the begin/end async
+events of all 100 bursty-trace request lifecycles, and one admit
+instant per lifecycle.  ``--require-mid-decode`` additionally demands
+``admit_mid_decode`` instants — the CI serving-smoke job runs
+``examples/serve_http.py --backend generate --trace-out`` and validates
+that artifact here with the report arguments omitted (trace-only mode).
+Span *durations* are wall-clock and never gated — only the artifact's
+shape is.
 
 Exit code 0 when everything holds; 1 with a per-check report otherwise.
 Regenerate the baseline with the same ``--smoke`` run when an intentional
@@ -67,6 +79,11 @@ MAX_ABS_DIFF_CEIL = 1e-2  # engine vs dense fp32 logits
 # boundary: < 10% of compile time on the bench mini network (an absolute
 # ratio gate — machine speed cancels, so no baseline entry is needed)
 VERIFY_OVERHEAD_CEIL = 0.10
+# the HTTP front end must keep the batch nearly full under the bursty
+# trace (an absolute gate — no baseline entry needed): continuous
+# batching is the point, so a mostly-idle batch is a regression even if
+# every request is served correctly
+HTTP_OCCUPANCY_FLOOR = 0.90
 
 DETERMINISTIC_HW_FIELDS = (
     "crossbars",
@@ -193,6 +210,52 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
             f"{ovh:.2f} > {time_tol} x baseline {bovh:.2f}",
         )
 
+    hs = current.get("http_service")
+    c.check(hs is not None, "http_service entry missing")
+    if hs:
+        # everything here is an absolute gate: socket timing makes the
+        # HTTP batches_run nondeterministic, so unlike the in-process
+        # service entry there is nothing to pin against the baseline
+        c.check(
+            hs.get("all_ok") is True,
+            f"http_service: not every request served ok: {hs}",
+        )
+        c.check(
+            hs.get("trace_count") == 1,
+            f"http_service traced the forward {hs.get('trace_count')} "
+            "times (must be exactly 1: fixed batch shape)",
+        )
+        occ = hs.get("occupancy_mean", 0.0)
+        c.check(
+            occ >= HTTP_OCCUPANCY_FLOOR,
+            f"http_service occupancy {occ:.3f} below "
+            f"{HTTP_OCCUPANCY_FLOOR} through the HTTP path",
+        )
+        c.check(
+            hs.get("requests_per_s", 0) > 0
+            and hs.get("first_result_p99_s", 0) > 0
+            and hs.get("http_completed", 0) >= hs.get("requests", 1),
+            f"http_service SLO metrics empty: {hs}",
+        )
+        shed = hs.get("shed") or {}
+        c.check(
+            shed.get("conservation_ok") is True,
+            f"http_service shed phase lost or corrupted requests: {shed}",
+        )
+        c.check(
+            shed.get("trace_count") == 1,
+            f"http_service shed server traced "
+            f"{shed.get('trace_count')} times",
+        )
+        # the exact shed count races the worker's drain speed; only its
+        # bounds are deterministic (the burst exceeds queue + slots, so
+        # at least one request must shed; all of them may not)
+        c.check(
+            0 < shed.get("shed", 0) < shed.get("requests", 0),
+            f"http_service shed count {shed.get('shed')} outside "
+            f"(0, {shed.get('requests')})",
+        )
+
     vf = current.get("verify")
     c.check(vf is not None, "verify overhead entry missing")
     if vf:
@@ -280,8 +343,17 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
 MIN_REQUEST_SPANS = 100
 
 
-def check_trace(c: Checker, path: str) -> None:
-    """Validate the shape of a ``--trace-out`` Chrome trace artifact."""
+def check_trace(c: Checker, path: str,
+                require_mid_decode: bool = False) -> None:
+    """Validate the shape of a ``--trace-out`` Chrome trace artifact.
+
+    With ``require_mid_decode`` the artifact must additionally carry at
+    least one ``admit_mid_decode`` instant — a slot refilled while other
+    slots were live between decode steps — with well-formed ``slot``/
+    ``pos`` args (the per-slot continuous-batching property, produced by
+    a generation serving run such as ``examples/serve_http.py --backend
+    generate --trace-out``).
+    """
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -304,20 +376,33 @@ def check_trace(c: Checker, path: str) -> None:
         f"trace: {len(bad)} events missing schema fields, first: {bad[:1]}",
     )
     spans = [e for e in events if e["ph"] == "X"]
-    compile_spans = [e for e in spans if e.get("cat") == "compile"]
-    c.check(
-        bool(compile_spans),
-        "trace: no compile-phase spans (ph=X, cat=compile)",
-    )
-    layer_spans = [
-        e
-        for e in spans
-        if e.get("cat") == "execute" and e["name"].startswith("layer:")
-    ]
-    c.check(
-        bool(layer_spans),
-        "trace: no per-layer executor spans (ph=X, cat=execute, layer:*)",
-    )
+    if require_mid_decode:
+        # a generation serving trace: decode/prefill step spans instead
+        # of the bench trace's compile + per-layer executor spans
+        decode_spans = [
+            e for e in spans
+            if e.get("cat") == "serve" and e["name"] == "serve.decode"
+        ]
+        c.check(
+            bool(decode_spans),
+            "trace: no decode-step spans (ph=X, cat=serve, serve.decode)",
+        )
+    else:
+        compile_spans = [e for e in spans if e.get("cat") == "compile"]
+        c.check(
+            bool(compile_spans),
+            "trace: no compile-phase spans (ph=X, cat=compile)",
+        )
+        layer_spans = [
+            e
+            for e in spans
+            if e.get("cat") == "execute" and e["name"].startswith("layer:")
+        ]
+        c.check(
+            bool(layer_spans),
+            "trace: no per-layer executor spans "
+            "(ph=X, cat=execute, layer:*)",
+        )
     begins = [e for e in events if e["ph"] == "b" and e.get("cat") == "request"]
     ends = [e for e in events if e["ph"] == "e" and e.get("cat") == "request"]
     c.check(
@@ -329,12 +414,46 @@ def check_trace(c: Checker, path: str) -> None:
         len(ends) == len(begins),
         f"trace: {len(begins)} request begins vs {len(ends)} ends",
     )
+    admits = [
+        e for e in events
+        if e["ph"] == "n" and e.get("cat") == "request"
+        and (e.get("args") or {}).get("event")
+        in ("admit", "admit_mid_decode")
+    ]
+    c.check(
+        len(admits) >= len(begins),
+        f"trace: {len(admits)} admit instants for {len(begins)} request "
+        "lifecycles (every admitted request must carry one)",
+    )
+    if require_mid_decode:
+        mid = [
+            e for e in admits
+            if e["args"]["event"] == "admit_mid_decode"
+        ]
+        c.check(
+            bool(mid),
+            "trace: no admit_mid_decode instants — no slot was refilled "
+            "while other slots were mid-decode",
+        )
+        bad = [
+            e for e in mid
+            if not (e["args"].get("slot", -1) >= 0
+                    and e["args"].get("pos", 0) >= 1)
+        ]
+        c.check(
+            not bad,
+            f"trace: {len(bad)} admit_mid_decode instants with malformed "
+            f"slot/pos args, first: {bad[:1]}",
+        )
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh bench_engine JSON")
-    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh bench_engine JSON (omit for --trace-only "
+                         "validation)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed baseline JSON")
     ap.add_argument(
         "--time-tol",
         type=float,
@@ -353,16 +472,29 @@ def main(argv=None) -> int:
         metavar="FILE",
         help="also validate a bench_engine --trace-out Chrome trace artifact",
     )
+    ap.add_argument(
+        "--require-mid-decode",
+        action="store_true",
+        help="the --trace artifact must carry admit_mid_decode instants "
+             "(a generation serving trace)",
+    )
     args = ap.parse_args(argv)
+    if (args.current is None) != (args.baseline is None):
+        ap.error("current and baseline must be given together")
+    if args.current is None and not args.trace:
+        ap.error("nothing to check: give current+baseline and/or --trace")
 
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-
-    c = compare(current, baseline, args.time_tol, args.top1_slack)
+    if args.current is not None:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        c = compare(current, baseline, args.time_tol, args.top1_slack)
+    else:
+        c = Checker()
     if args.trace:
-        check_trace(c, args.trace)
+        check_trace(c, args.trace,
+                    require_mid_decode=args.require_mid_decode)
     print(f"{c.passed} checks passed, {len(c.failures)} failed")
     for msg in c.failures:
         print(f"FAIL: {msg}")

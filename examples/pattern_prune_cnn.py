@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.mapping import map_layer, map_layer_naive
 from repro.core.pruning import PruneConfig, admm_pattern_prune, sparsity_of
 from repro.engine import (
+    CompileOptions,
     InferenceService,
     compile_network,
     load_program,
@@ -86,10 +87,8 @@ else:
 # build the quantized-compile config up front so bad flags fail in
 # milliseconds, not after the training/pruning pipeline has run
 if args.precision != "fp32":
-    from repro.engine import EngineConfig
-
-    quant_ecfg = EngineConfig(precision=args.precision,
-                              cell_bits=args.cell_bits)
+    quant_opts = CompileOptions(precision=args.precision,
+                                cell_bits=args.cell_bits)
 
 t0 = time.time()
 cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
@@ -172,7 +171,8 @@ print(f"crossbars: ours={tot_ours} naive={tot_naive} "
       f"-> area efficiency {tot_naive/max(tot_ours,1):.2f}x")
 
 # -- 5. compile into an executable crossbar program + serve ------------------
-program = compile_network(cfg, res.params, res.pattern_bits, tracer=tracer)
+program = compile_network(cfg, res.params, res.pattern_bits,
+                          options=CompileOptions(tracer=tracer))
 with tempfile.TemporaryDirectory() as td:  # pay compilation once per model
     program = load_program(save_program(td + "/prog", program))
 x, y = gen_batch(jax.random.PRNGKey(123), 64)
@@ -195,8 +195,10 @@ print(f"  hardware: {rep['crossbars']} crossbars "
 # and packing/reorder strategies, priced by the simulator's own cost
 # model, and never chooses a candidate worse than the fixed scheme on
 # area or energy.  fp32 logits are bit-identical — layout only.
-program_opt = compile_network(cfg, res.params, res.pattern_bits,
-                              optimize="auto", tracer=tracer)
+program_opt = compile_network(
+    cfg, res.params, res.pattern_bits,
+    options=CompileOptions(optimize="auto", tracer=tracer),
+)
 rep_opt = program_opt.hardware_report()
 logits_opt = make_forward(program_opt)(x)
 assert bool(jnp.array_equal(logits_opt, logits_eng)), "layout changed math"
@@ -270,7 +272,7 @@ print(f"  per-chip split ({chips['model_shards']} tile-parallel chip(s)): "
 # ADC-energy win of the narrower cells appears next to the accuracy cost.
 if args.precision != "fp32":
     program_q = compile_network(
-        cfg, res.params, res.pattern_bits, ecfg=quant_ecfg
+        cfg, res.params, res.pattern_bits, options=quant_opts
     )
     x_eval, y_eval = gen_batch(jax.random.PRNGKey(321), 256)
     logits_fp = make_forward(program)(x_eval)

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.transformer import count_params, init_params
-from repro.runtime.serve import Request, ServeConfig, ServeLoop
+from repro.runtime.serve import ServeConfig, ServeLoop
+from repro.serve import Request
 
 
 def main():

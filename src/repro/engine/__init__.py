@@ -83,6 +83,47 @@ How it composes:
   compile span carrying evaluations / chosen candidate / area-vs-fixed,
   next to the ``lower:<name>`` spans.
 
+Serving
+-------
+The serving front door lives in ``repro.serve`` — one
+:class:`~repro.serve.Request`/:class:`~repro.serve.Response` contract and
+one ``submit``/``stream``/``run`` verb set over both backends:
+
+* **Classification** — ``repro.serve.classify_session(program)`` wraps
+  :class:`InferenceService` (this package): fixed-shape continuous
+  batching over the jitted engine forward, traced exactly once.
+* **Generation** — ``repro.serve.generate_session(cfg, statics, params,
+  scfg)`` wraps ``runtime.serve.DecodeService``: per-slot decode
+  positions, so freed slots are refilled *mid-decode* while other
+  requests keep decoding — and every request's tokens are bit-identical
+  to running it alone.
+* **HTTP** — ``repro.serve.ServingServer(session)`` is a stdlib-asyncio
+  HTTP/1.1 front end: ``POST /v1/run`` (one request/response),
+  ``POST /v1/stream`` (chunked NDJSON in completion order),
+  ``GET /healthz``, ``GET /metrics`` (Prometheus text).  All jitted
+  calls run on one worker thread; the event loop only parses, enqueues,
+  and resolves futures.  Over capacity it *sheds*: HTTP 429 with a
+  backpressure-derived ``Retry-After``, while already-admitted work is
+  never dropped (``SchedulerFull`` never escapes the public path —
+  sessions translate it to ``repro.serve.Overloaded``).
+
+``examples/serve_http.py`` boots the full stack and reports req/s,
+first-result p50/p99, and slot occupancy; ``benchmarks/bench_engine.py
+http_service`` gates the same numbers in CI.  The old entry points
+(``engine.service.ClassifyRequest``, ``runtime.serve.Request``) remain
+as deprecated shims that construct ``repro.serve.Request`` and warn.
+
+Compile options
+---------------
+:class:`CompileOptions` is the one frozen object carrying everything
+``compile_network`` accepts beyond the network itself — lowering
+geometry (``block``/``tile``/``precision``/``cell_bits``, mirroring
+:class:`EngineConfig`) plus the compile-pass switches
+(``verify``/``optimize``/``tracer``).  Prefer
+``compile_network(cfg, params, bits, options=CompileOptions(...))``;
+the loose kwargs remain as deprecated aliases that compile bit-identical
+programs while emitting ``DeprecationWarning``.
+
 Verification
 ------------
 ``repro.analysis`` statically checks compiled programs — pure numpy
@@ -116,7 +157,12 @@ wall-clock reads, host RNG, and unsynchronized timing out of
 jit-reachable code.
 """
 
-from repro.engine.executor import execute, extract_patches, make_forward
+from repro.engine.executor import (
+    execute,
+    extract_patches,
+    make_forward,
+    warmup_forward,
+)
 from repro.engine.scheduler import (
     SchedulerFull,
     SchedulerMetrics,
@@ -137,6 +183,7 @@ from repro.core.mapsearch import (
 )
 from repro.engine.lowering import (
     PRECISIONS,
+    CompileOptions,
     EngineConfig,
     compile_network,
     conv_mapping_search,
@@ -146,7 +193,9 @@ from repro.engine.lowering import (
 )
 from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.engine.serialize import load_program, save_program
-from repro.engine.service import ClassifyRequest, InferenceService
+# back-compat re-export for the deprecation window
+from repro.engine.service import ClassifyRequest  # lint: allow(L005)
+from repro.engine.service import InferenceService
 from repro.engine.stats import (
     ActivationStats,
     LayerSkipStats,
@@ -156,6 +205,7 @@ from repro.engine.stats import (
 
 __all__ = [
     "PRECISIONS",
+    "CompileOptions",
     "EngineConfig",
     "compile_network",
     "conv_mapping_search",
@@ -170,6 +220,7 @@ __all__ = [
     "CompiledFC",
     "CompiledNetwork",
     "make_forward",
+    "warmup_forward",
     "execute",
     "extract_patches",
     "save_program",

@@ -69,7 +69,7 @@ from repro.models.cnn import channel_norm, max_pool_2x2
 from repro.obs.trace import Tracer
 from repro.parallel.sharding import shard_block_pattern
 
-__all__ = ["extract_patches", "make_forward", "execute"]
+__all__ = ["extract_patches", "make_forward", "warmup_forward", "execute"]
 
 
 def extract_patches(x: jax.Array, k: int) -> jax.Array:
@@ -473,6 +473,27 @@ def make_forward(
     fn.observed_times = lambda: {
         name: total / calls for name, (calls, total) in observed.items()
     }
+    return fn
+
+
+def warmup_forward(fn, program: CompiledNetwork, batch_slots: int):
+    """Trace ``fn`` at the fixed serving batch shape, before traffic.
+
+    Runs one all-dead batch — zeros with an all-``False`` validity mask,
+    exactly the shape/dtype signature the serving scheduler executes —
+    and blocks until ready, so a front end pays jit tracing (and
+    compilation) at boot instead of on its first request, without
+    pushing a synthetic request through the scheduler (boot leaves the
+    served-traffic metrics untouched).  Returns ``fn``.
+    """
+    cfg = program.config
+    x = jnp.zeros(
+        (batch_slots, cfg.conv_channels[0][0], cfg.input_hw, cfg.input_hw),
+        jnp.float32,
+    )
+    valid = np.zeros(batch_slots, bool)
+    out = fn(x, valid)
+    jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
     return fn
 
 

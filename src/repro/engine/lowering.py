@@ -18,6 +18,7 @@ the weights' nonzero masks.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -39,8 +40,9 @@ from repro.engine.program import CompiledConv, CompiledFC, CompiledNetwork
 from repro.models.cnn import CNNConfig
 from repro.obs.trace import NULL_TRACER, Tracer
 
-__all__ = ["EngineConfig", "PRECISIONS", "lower_matrix", "lower_conv",
-           "lower_fc", "conv_mapping_search", "compile_network"]
+__all__ = ["EngineConfig", "CompileOptions", "PRECISIONS", "lower_matrix",
+           "lower_conv", "lower_fc", "conv_mapping_search",
+           "compile_network"]
 
 PRECISIONS = ("fp32", "int8")
 
@@ -75,6 +77,66 @@ class EngineConfig:
             )
         if self.cell_bits < 1:
             raise ValueError(f"cell_bits must be >= 1, got {self.cell_bits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Everything :func:`compile_network` accepts beyond the network itself.
+
+    One frozen object in place of the loose kwargs that accreted on the
+    compile entry point (``ecfg``/``precision``/``tracer``/``verify``/
+    ``optimize``) — build it once, thread it through configs and tests,
+    and the compile call stays ``compile_network(cfg, params, bits,
+    options=opts)`` no matter how many knobs exist.
+
+    The geometry fields mirror :class:`EngineConfig` (same defaults, same
+    validation); :meth:`engine_config` projects them back out for the
+    ``lower_*`` helpers, which keep taking a plain ``EngineConfig``.
+
+    ``verify``/``optimize``/``tracer`` carry the compile-pass switches —
+    see :func:`compile_network` for their semantics.
+    """
+
+    block: int = 128
+    tile: int = 128
+    precision: str = "fp32"
+    cell_bits: int = 4
+    verify: str | None = None
+    optimize: "str | MappingSearchConfig | None" = None
+    tracer: Tracer | None = None
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}"
+            )
+        if self.cell_bits < 1:
+            raise ValueError(f"cell_bits must be >= 1, got {self.cell_bits}")
+        if self.verify not in (None, "warn", "strict"):
+            raise ValueError(
+                f"verify must be None, 'warn' or 'strict', got "
+                f"{self.verify!r}"
+            )
+        if self.optimize is not None and self.optimize != "auto" and not (
+            isinstance(self.optimize, MappingSearchConfig)
+        ):
+            raise ValueError(
+                f"optimize must be None, 'auto' or a MappingSearchConfig, "
+                f"got {self.optimize!r}"
+            )
+
+    @classmethod
+    def from_engine_config(cls, ecfg: EngineConfig, **kw) -> "CompileOptions":
+        """Lift a lowering geometry into full compile options."""
+        return cls(block=ecfg.block, tile=ecfg.tile,
+                   precision=ecfg.precision, cell_bits=ecfg.cell_bits, **kw)
+
+    def engine_config(self) -> EngineConfig:
+        """The :class:`EngineConfig` these options imply."""
+        return EngineConfig(block=self.block, tile=self.tile,
+                            precision=self.precision,
+                            cell_bits=self.cell_bits)
 
 
 def _pad_axis(a: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -235,11 +297,13 @@ def compile_network(
     cfg: CNNConfig,
     params: dict,
     pattern_bits: dict[str, np.ndarray] | None = None,
-    ecfg: EngineConfig = EngineConfig(),
+    ecfg: EngineConfig | None = None,
     precision: str | None = None,
     tracer: Tracer | None = None,
     verify: str | None = None,
     optimize: "str | MappingSearchConfig | None" = None,
+    *,
+    options: CompileOptions | None = None,
 ) -> CompiledNetwork:
     """Lower a (pruned) CNN end-to-end into a :class:`CompiledNetwork`.
 
@@ -249,19 +313,28 @@ def compile_network(
       pattern_bits: per-conv packed 3x3 pattern bitmasks
         (``PruneResult.pattern_bits``); recovered from the weights' nonzero
         structure for layers not listed.
-      ecfg: spmm lowering geometry (block/tile, stored precision).
-      precision: shorthand override of ``ecfg.precision`` ('fp32'/'int8').
-      tracer: optional span tracer (``obs/trace.py``).  The whole compile
-        becomes a ``compile_network`` span containing one ``lower:<name>``
-        span per layer, each wrapping its phase spans
+      options: a :class:`CompileOptions` carrying the lowering geometry
+        and every compile-pass switch.  This is the preferred form; the
+        loose keyword arguments below are deprecated aliases kept for one
+        release and cannot be combined with ``options=``.
+      ecfg: deprecated — spmm lowering geometry (block/tile, stored
+        precision); use the matching :class:`CompileOptions` fields.
+      precision: deprecated — shorthand override of ``ecfg.precision``
+        ('fp32'/'int8'); use ``CompileOptions(precision=...)``.
+      tracer: deprecated alias of ``CompileOptions(tracer=...)``: optional
+        span tracer (``obs/trace.py``).  The whole compile becomes a
+        ``compile_network`` span containing one ``lower:<name>`` span per
+        layer, each wrapping its phase spans
         (prune -> reorder -> pack -> quantize), so a Perfetto load of the
         trace shows exactly where compile time goes.
-      verify: post-condition check of the compiled program via
+      verify: deprecated alias of ``CompileOptions(verify=...)``:
+        post-condition check of the compiled program via
         ``repro.analysis.verify`` — ``'strict'`` raises
         :class:`~repro.analysis.diagnostics.VerificationError` on any
         error diagnostic, ``'warn'`` emits a Python warning instead,
         ``None`` (default) skips the pass on this hot compile path.
-      optimize: per-layer mapping design-space search
+      optimize: deprecated alias of ``CompileOptions(optimize=...)``:
+        per-layer mapping design-space search
         (``core/mapsearch.py``) — ``'auto'`` uses the default
         :class:`~repro.core.mapsearch.MappingSearchConfig`, or pass a
         config to pick axes/seed/budget; ``None`` (default) keeps the
@@ -269,25 +342,50 @@ def compile_network(
         ``CompiledConv.mapping`` (priced by ``hardware_report``, saved in
         manifest v3) and each layer's search lands as a
         ``search:<name>`` compile span.
+
+    The deprecated-kwargs form compiles a bit-identical program to the
+    equivalent ``options=`` form (``tests/test_compile_options.py`` pins
+    this), it just warns on the way.
     """
-    if verify not in (None, "warn", "strict"):
-        raise ValueError(
-            f"verify must be None, 'warn' or 'strict', got {verify!r}"
-        )
-    if isinstance(optimize, MappingSearchConfig):
-        search_cfg = optimize
-    elif optimize == "auto":
-        search_cfg = MappingSearchConfig()
-    elif optimize is None:
-        search_cfg = None
+    legacy = [
+        name for name, value in (
+            ("ecfg", ecfg), ("precision", precision), ("tracer", tracer),
+            ("verify", verify), ("optimize", optimize),
+        ) if value is not None
+    ]
+    if options is not None:
+        if legacy:
+            raise TypeError(
+                "compile_network: pass options=CompileOptions(...) alone; "
+                f"also got deprecated kwarg(s) {legacy}"
+            )
     else:
-        raise ValueError(
-            f"optimize must be None, 'auto' or a MappingSearchConfig, "
-            f"got {optimize!r}"
+        if legacy:
+            warnings.warn(
+                "compile_network's loose kwargs "
+                "(ecfg/precision/tracer/verify/optimize) are deprecated; "
+                "pass options=CompileOptions(...) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+        base = ecfg if ecfg is not None else EngineConfig()
+        options = CompileOptions(
+            block=base.block,
+            tile=base.tile,
+            precision=precision if precision is not None else base.precision,
+            cell_bits=base.cell_bits,
+            verify=verify,
+            optimize=optimize,
+            tracer=tracer,
         )
-    if precision is not None:
-        ecfg = dataclasses.replace(ecfg, precision=precision)
-    tracer = tracer or NULL_TRACER
+    ecfg = options.engine_config()
+    verify = options.verify
+    if isinstance(options.optimize, MappingSearchConfig):
+        search_cfg = options.optimize
+    elif options.optimize == "auto":
+        search_cfg = MappingSearchConfig()
+    else:
+        search_cfg = None
+    tracer = options.tracer or NULL_TRACER
     pattern_bits = pattern_bits or {}
     convs = []
     hw = cfg.input_hw
@@ -360,8 +458,6 @@ def compile_network(
         if verify == "strict":
             report.raise_if_errors("compile_network")
         elif not report.ok:
-            import warnings
-
             warnings.warn(
                 "compile_network produced a program that fails "
                 "verification:\n" + report.format(),

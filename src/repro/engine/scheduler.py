@@ -28,6 +28,8 @@ each reimplementing (and subtly breaking) queue/slot bookkeeping:
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
 from collections import deque
 from typing import Any, Callable
@@ -73,10 +75,15 @@ class SchedulerMetrics:
     latency_max: float = 0.0
     queue_wait_sum: float = 0.0
     in_flight_sum: float = 0.0
+    first_results: int = 0
+    first_result_sum: float = 0.0
     latency_hist: Histogram = dataclasses.field(
         default_factory=_latency_hist, repr=False, compare=False
     )
     queue_wait_hist: Histogram = dataclasses.field(
+        default_factory=_latency_hist, repr=False, compare=False
+    )
+    first_result_hist: Histogram = dataclasses.field(
         default_factory=_latency_hist, repr=False, compare=False
     )
 
@@ -113,10 +120,24 @@ class SchedulerMetrics:
             return 0.0
         return self.in_flight_sum / self.completed
 
+    @property
+    def first_result_mean(self) -> float:
+        if self.first_results == 0:
+            return 0.0
+        return self.first_result_sum / self.first_results
+
     def record_admit(self, queue_wait: float) -> None:
         self.admitted += 1
         self.queue_wait_sum += queue_wait
         self.queue_wait_hist.observe(queue_wait)
+
+    def record_first_result(self, latency: float) -> None:
+        """Enqueue->first-result SLO latency: time to the first usable
+        output (first decode token for generation; the completed logits
+        for single-step classification)."""
+        self.first_results += 1
+        self.first_result_sum += latency
+        self.first_result_hist.observe(latency)
 
     def record_complete(self, latency: float, in_flight: float) -> None:
         self.completed += 1
@@ -141,6 +162,9 @@ class SchedulerMetrics:
             "queue_wait_mean_s": self.queue_wait_mean,
             "queue_wait_p99_s": self.queue_wait_hist.percentile(99),
             "in_flight_mean_s": self.in_flight_mean,
+            "first_result_mean_s": self.first_result_mean,
+            "first_result_p50_s": self.first_result_hist.percentile(50),
+            "first_result_p99_s": self.first_result_hist.percentile(99),
         }
 
     def to_prometheus(self, prefix: str = "scheduler") -> str:
@@ -164,6 +188,11 @@ class SchedulerMetrics:
         lines.extend(
             self.queue_wait_hist.prom_lines(f"{prefix}_queue_wait_seconds")
         )
+        lines.extend(
+            self.first_result_hist.prom_lines(
+                f"{prefix}_first_result_seconds"
+            )
+        )
         return "\n".join(lines) + "\n"
 
 
@@ -181,6 +210,13 @@ class SlotScheduler:
         "request" span from enqueue to completion with an admission
         instant, and queue depth / live slots are emitted as counter
         tracks.  ``None`` resolves to the shared no-op tracer.
+
+    Thread safety: every public method takes one internal re-entrant
+    lock, so an async front end may ``try_submit`` from its event loop
+    while a worker thread steps/refills/completes and a scraper calls
+    :meth:`snapshot` — counters and slot bookkeeping stay consistent.
+    (The histograms carry their own locks; ``reset_metrics`` swapping
+    the metrics object is atomic under the same lock.)
     """
 
     def __init__(
@@ -198,12 +234,16 @@ class SlotScheduler:
         self.max_queue = max_queue
         self._clock = clock
         self._tracer = tracer or NULL_TRACER
+        self._lock = threading.RLock()
         self._queue: deque[tuple[Any, float, int]] = deque()
         self._slots: list[Any | None] = [None] * batch_slots
         self._enq_time: list[float] = [0.0] * batch_slots
         self._admit_time: list[float] = [0.0] * batch_slots
         self._slot_rid: list[int] = [0] * batch_slots
+        self._first_done: list[bool] = [True] * batch_slots
         self._rid_seq = 0  # request-id sequence for the trace's async spans
+        self._last_step_t: float | None = None
+        self._step_ewma: float = 0.0  # smoothed inter-step wall time
         self.metrics = SchedulerMetrics(batch_slots=batch_slots)
 
     # ------------------------------------------------------------- admission
@@ -211,21 +251,40 @@ class SlotScheduler:
     def has_capacity(self) -> bool:
         """Whether the queue can accept a request right now — a probe
         that, unlike :meth:`try_submit`, does not count a rejection."""
-        return not self.max_queue or len(self._queue) < self.max_queue
+        with self._lock:
+            return not self.max_queue or len(self._queue) < self.max_queue
 
     def try_submit(self, item: Any) -> bool:
         """Enqueue ``item``; ``False`` (and a rejected tick) when full."""
-        if not self.has_capacity():
-            self.metrics.rejected += 1
-            self._tracer.instant("request_rejected", cat="request")
-            return False
-        self._rid_seq += 1
-        rid = self._rid_seq
-        self._queue.append((item, self._clock(), rid))
-        self.metrics.enqueued += 1
-        self._tracer.async_begin("request", rid, cat="request")
-        self._emit_counters()
-        return True
+        with self._lock:
+            if not (not self.max_queue or len(self._queue) < self.max_queue):
+                self.metrics.rejected += 1
+                self._tracer.instant("request_rejected", cat="request")
+                return False
+            self._rid_seq += 1
+            rid = self._rid_seq
+            self._queue.append((item, self._clock(), rid))
+            self.metrics.enqueued += 1
+            self._tracer.async_begin("request", rid, cat="request")
+            self._emit_counters()
+            return True
+
+    def resubmit(self, item: Any) -> None:
+        """Re-enqueue already-admitted work at the *front* of the queue.
+
+        The priority lane for load shedding: work the service already
+        accepted (e.g. an in-flight slot replayed after a fault, or a
+        request bumped out of a slot) must never compete with — or be
+        shed in favour of — brand-new arrivals, so it bypasses
+        ``max_queue`` and is admitted before anything behind it.
+        """
+        with self._lock:
+            self._rid_seq += 1
+            rid = self._rid_seq
+            self._queue.appendleft((item, self._clock(), rid))
+            self.metrics.enqueued += 1
+            self._tracer.async_begin("request", rid, cat="request")
+            self._emit_counters()
 
     def submit(self, item: Any) -> None:
         """Enqueue ``item``; raise :class:`SchedulerFull` when full."""
@@ -240,36 +299,48 @@ class SlotScheduler:
         Returns the ``(slot, item)`` pairs admitted *now*; the caller
         writes their payloads into exactly those batch rows.
         """
-        admitted = []
-        for i in range(self.batch_slots):
-            if self._slots[i] is None and self._queue:
-                item, t_enq, rid = self._queue.popleft()
-                now = self._clock()
-                self._slots[i] = item
-                self._enq_time[i] = t_enq
-                self._admit_time[i] = now
-                self._slot_rid[i] = rid
-                self.metrics.record_admit(max(now - t_enq, 0.0))
-                self._tracer.async_instant(
-                    "request", rid, cat="request", event="admit", slot=i
-                )
-                admitted.append((i, item))
-        if admitted:
-            self._emit_counters()
-        return admitted
+        with self._lock:
+            admitted = []
+            for i in range(self.batch_slots):
+                if self._slots[i] is None and self._queue:
+                    item, t_enq, rid = self._queue.popleft()
+                    now = self._clock()
+                    self._slots[i] = item
+                    self._enq_time[i] = t_enq
+                    self._admit_time[i] = now
+                    self._slot_rid[i] = rid
+                    self._first_done[i] = False
+                    self.metrics.record_admit(max(now - t_enq, 0.0))
+                    self._tracer.async_instant(
+                        "request", rid, cat="request", event="admit", slot=i
+                    )
+                    admitted.append((i, item))
+            if admitted:
+                self._emit_counters()
+            return admitted
 
     # ------------------------------------------------------------- occupancy
 
     def live(self) -> list[tuple[int, Any]]:
         """The currently occupied ``(slot, item)`` pairs."""
-        return [(i, it) for i, it in enumerate(self._slots) if it is not None]
+        with self._lock:
+            return [
+                (i, it) for i, it in enumerate(self._slots) if it is not None
+            ]
 
     def valid_mask(self) -> np.ndarray:
         """Bool [batch_slots]: which rows of the fixed batch are live."""
-        return np.array([s is not None for s in self._slots], bool)
+        with self._lock:
+            return np.array([s is not None for s in self._slots], bool)
 
     def queued(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
+
+    def slot_rid(self, slot: int) -> int:
+        """The trace async-span id of the request occupying ``slot``."""
+        with self._lock:
+            return self._slot_rid[slot]
 
     def reset_metrics(self) -> None:
         """Start a fresh metrics window (e.g. after a warm-up batch).
@@ -279,38 +350,98 @@ class SlotScheduler:
         complete they contribute only their post-reset time to the fresh
         window instead of dragging pre-reset wait in with them.
         """
-        now = self._clock()
-        for i, s in enumerate(self._slots):
-            if s is not None:
-                self._enq_time[i] = now
-                self._admit_time[i] = now
-        self.metrics = SchedulerMetrics(batch_slots=self.batch_slots)
+        with self._lock:
+            now = self._clock()
+            for i, s in enumerate(self._slots):
+                if s is not None:
+                    self._enq_time[i] = now
+                    self._admit_time[i] = now
+            self._last_step_t = None
+            self.metrics = SchedulerMetrics(batch_slots=self.batch_slots)
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time metrics dict (equivalent to
+        ``scheduler.metrics.snapshot()`` but taken under the scheduler
+        lock, so a concurrent ``reset_metrics`` can't swap the object
+        mid-read)."""
+        with self._lock:
+            return self.metrics.snapshot()
 
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        with self._lock:
+            return bool(self._queue) or any(
+                s is not None for s in self._slots
+            )
+
+    def retry_after_hint(self) -> float:
+        """Backpressure-derived retry hint in seconds for shed requests.
+
+        Estimates how long until the queue has drained enough to accept
+        new work: full-queue depth in units of batch_slots-sized waves,
+        times the smoothed inter-step wall time (falling back to 50ms
+        before any step has run).  Clamped to [1ms, 60s].
+        """
+        with self._lock:
+            step = self._step_ewma if self._step_ewma > 0 else 0.05
+            waves = max(1, math.ceil((len(self._queue) + 1)
+                                     / self.batch_slots))
+            return float(min(max(waves * step, 1e-3), 60.0))
 
     # ------------------------------------------------------------ completion
 
     def record_step(self) -> None:
         """Account one executed batch step at the current occupancy."""
-        self.metrics.steps += 1
-        live = sum(1 for s in self._slots if s is not None)
-        self.metrics.occupancy_sum += live
-        self._tracer.counter("scheduler/slots_live", live=live)
+        with self._lock:
+            now = self._clock()
+            if self._last_step_t is not None:
+                dur = max(now - self._last_step_t, 0.0)
+                self._step_ewma = (
+                    dur if self._step_ewma == 0.0
+                    else 0.8 * self._step_ewma + 0.2 * dur
+                )
+            self._last_step_t = now
+            self.metrics.steps += 1
+            live = sum(1 for s in self._slots if s is not None)
+            self.metrics.occupancy_sum += live
+            self._tracer.counter("scheduler/slots_live", live=live)
+
+    def record_first_result(self, slot: int) -> None:
+        """Record the enqueue->first-result latency for ``slot`` (e.g.
+        the first decode token landing).  Idempotent per occupancy;
+        :meth:`complete` falls back to recording it for single-step
+        workloads that never call this."""
+        with self._lock:
+            if self._first_done[slot] or self._slots[slot] is None:
+                return
+            self._first_done[slot] = True
+            now = self._clock()
+            self.metrics.record_first_result(
+                max(now - self._enq_time[slot], 0.0)
+            )
+            self._tracer.async_instant(
+                "request", self._slot_rid[slot], cat="request",
+                event="first_result", slot=slot,
+            )
 
     def complete(self, slot: int) -> Any:
         """Free ``slot``, record its request's latency, return the item."""
-        item = self._slots[slot]
-        if item is None:
-            raise ValueError(f"slot {slot} is not occupied")
-        self._slots[slot] = None
-        now = self._clock()
-        latency = max(now - self._enq_time[slot], 0.0)
-        in_flight = max(now - self._admit_time[slot], 0.0)
-        self.metrics.record_complete(latency, in_flight)
-        self._tracer.async_end("request", self._slot_rid[slot], cat="request")
-        self._emit_counters()
-        return item
+        with self._lock:
+            item = self._slots[slot]
+            if item is None:
+                raise ValueError(f"slot {slot} is not occupied")
+            if not self._first_done[slot]:
+                self.record_first_result(slot)
+            self._slots[slot] = None
+            self._first_done[slot] = True
+            now = self._clock()
+            latency = max(now - self._enq_time[slot], 0.0)
+            in_flight = max(now - self._admit_time[slot], 0.0)
+            self.metrics.record_complete(latency, in_flight)
+            self._tracer.async_end(
+                "request", self._slot_rid[slot], cat="request"
+            )
+            self._emit_counters()
+            return item
 
     def _emit_counters(self) -> None:
         t = self._tracer

@@ -24,31 +24,34 @@ served* rather than an assumption.
 
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.executor import make_forward
+from repro.engine.executor import make_forward, warmup_forward
 from repro.engine.program import CompiledNetwork
 from repro.engine.scheduler import SlotScheduler
 from repro.engine.stats import ActivationStats
 from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serve.api import Request as ServeRequest
 
 __all__ = ["ClassifyRequest", "InferenceService"]
 
 
-@dataclasses.dataclass
-class ClassifyRequest:
-    """One image in, logits + argmax label out."""
+class ClassifyRequest(ServeRequest):
+    """Deprecated: use :class:`repro.serve.Request` (``image=`` form)."""
 
-    image: np.ndarray  # [C, H, W]
-    logits: np.ndarray | None = None
-    label: int | None = None
-    done: bool = False
+    def __init__(self, image, logits=None, label=None, done: bool = False):
+        warnings.warn(
+            "repro.engine.service.ClassifyRequest is deprecated; use "
+            "repro.serve.Request(image=...)",
+            DeprecationWarning, stacklevel=2,
+        )
+        super().__init__(image=image, logits=logits, label=label, done=done)
 
 
 class InferenceService:
@@ -115,10 +118,15 @@ class InferenceService:
         """How many times the underlying forward has been traced."""
         return self._forward.trace_count()
 
+    def warmup(self) -> None:
+        """Trace/compile the forward at the serving batch shape without
+        sending traffic through the scheduler (metrics stay at zero)."""
+        warmup_forward(self._forward, self.program, self.batch_slots)
+
     @property
     def metrics(self) -> dict:
         """Scheduler metrics: queue/latency/occupancy of the served load."""
-        return self.scheduler.metrics.snapshot()
+        return self.scheduler.snapshot()
 
     def reset_stats(self) -> None:
         self.activation_stats = None
@@ -140,14 +148,24 @@ class InferenceService:
             raise ValueError(f"request image {img.shape} != expected {shape}")
         return img
 
-    def submit(self, request: ClassifyRequest) -> ClassifyRequest:
+    def submit(self, request: ServeRequest) -> ServeRequest:
         """Validate and enqueue one request (raises ``SchedulerFull`` when
         the bounded queue is full, ``ValueError`` on a bad image shape)."""
         request.image = self._validate(request.image)
         self.scheduler.submit(request)
         return request
 
-    def step(self) -> list[ClassifyRequest]:
+    def try_submit(self, request: ServeRequest) -> bool:
+        """Validate and enqueue; ``False`` when the bounded queue is full
+        (the shed path the ``repro.serve`` session turns into
+        ``Overloaded`` — ``SchedulerFull`` never escapes that route)."""
+        request.image = self._validate(request.image)
+        return self.scheduler.try_submit(request)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step(self) -> list[ServeRequest]:
         """Refill free slots from the queue and run one fixed-shape batch.
 
         Returns the requests completed by this batch (empty when there
@@ -180,14 +198,14 @@ class InferenceService:
             finished.append(req)
         return finished
 
-    def run(self) -> list[ClassifyRequest]:
+    def run(self) -> list[ServeRequest]:
         """Serve until the queue and every slot are drained."""
         finished = []
         while self.scheduler.has_work():
             finished.extend(self.step())
         return finished
 
-    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyRequest]:
+    def serve(self, requests: list[ServeRequest]) -> list[ServeRequest]:
         """Drain ``requests`` through the scheduler.
 
         All request shapes are validated *before* any batch runs, so a
@@ -210,7 +228,7 @@ class InferenceService:
 
     def classify(self, images: np.ndarray) -> np.ndarray:
         """Convenience: [N, C, H, W] -> labels [N]."""
-        reqs = [ClassifyRequest(image=img) for img in np.asarray(images)]
+        reqs = [ServeRequest(image=img) for img in np.asarray(images)]
         self.serve(reqs)
         return np.array([r.label for r in reqs], np.int64)
 

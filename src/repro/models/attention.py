@@ -136,8 +136,19 @@ def _mask(
     if window is not None:
         m &= kk > qq - window
     if kv_len is not None:
-        m &= kk < kv_len
+        kv = (
+            kv_len[..., None, None]
+            if getattr(kv_len, "ndim", 0)
+            else kv_len
+        )
+        m &= kk < kv
     return m
+
+
+def _expand_mask(m: jax.Array) -> jax.Array:
+    """Broadcast a mask to score rank 4: [S,T] -> [1,1,S,T] (shared across
+    batch) or [B,S,T] -> [B,1,S,T] (per-row positions / cache lengths)."""
+    return m[None, None] if m.ndim == 2 else m[:, None]
 
 
 def _full_attention(q, k, v, qpos, kpos, causal, window, kv_len):
@@ -146,8 +157,8 @@ def _full_attention(q, k, v, qpos, kpos, causal, window, kv_len):
     s = jnp.einsum(
         "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * (dh ** -0.5)
-    m = _mask(qpos, kpos, causal, window, kv_len)  # [Sq, Tk] (+ broadcast)
-    s = jnp.where(m[None, None], s, _NEG)
+    m = _mask(qpos, kpos, causal, window, kv_len)  # [Sq, Tk] / [B, Sq, Tk]
+    s = jnp.where(_expand_mask(m), s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
@@ -176,7 +187,7 @@ def _chunked_attention(q, k, v, qpos, kpos, causal, window, kv_len, chunk):
             dh ** -0.5
         )
         msk = _mask(qpos, pb, causal, window, kv_len)
-        s = jnp.where(msk[None, None], s, _NEG)
+        s = jnp.where(_expand_mask(msk), s, _NEG)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         alpha = jnp.exp(m_prev - m_new)
@@ -262,15 +273,25 @@ def attention_apply(
     params,
     cfg: AttnConfig,
     x: jax.Array,  # [B, S, D]
-    positions: jax.Array,  # [S] global positions of x tokens
+    positions: jax.Array,  # [S] (shared) or [B, S] (per-row) positions
     memory: jax.Array | None = None,  # cross-attention source [B, T, D]
     cache: dict | None = None,  # kv cache to read/update
-    cache_pos: jax.Array | None = None,  # scalar write offset
-    cache_len: jax.Array | None = None,  # valid cache length (incl. new)
+    cache_pos: jax.Array | None = None,  # scalar or [B] write offset
+    cache_len: jax.Array | None = None,  # scalar or [B] valid length
 ) -> tuple[jax.Array, dict | None]:
-    """Returns (output [B,S,D], updated cache)."""
+    """Returns (output [B,S,D], updated cache).
+
+    ``positions`` / ``cache_pos`` / ``cache_len`` accept either the shared
+    (scalar / [S]) form — every batch row at the same decode position — or
+    the per-row ([B,S] / [B]) form used by continuous batching, where each
+    slot advances independently.  Per-row mode keeps the mask-based paths
+    (the SWA slice and sharded flash-decode shortcuts need a shared scalar
+    position and are skipped)."""
     b, s, d = x.shape
     dh, hq = cfg.d_head, cfg.hq_pad
+    per_row = (
+        cache_pos is not None and getattr(cache_pos, "ndim", 0) > 0
+    ) or (cache_len is not None and getattr(cache_len, "ndim", 0) > 0)
 
     q = linear(params["wq"], x).reshape(b, s, hq, dh)
     src = memory if memory is not None else x
@@ -280,27 +301,40 @@ def attention_apply(
 
     if cfg.rope_theta is not None and memory is None:
         freqs = rope_frequencies(dh, cfg.rope_theta)
-        q = apply_rope(q, positions[None, :], freqs)
-        k = apply_rope(k, positions[None, :], freqs)
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = apply_rope(q, pos_b, freqs)
+        k = apply_rope(k, pos_b, freqs)
 
     new_cache = cache
     if cache is not None and memory is None:
         pos0 = cache_pos if cache_pos is not None else jnp.int32(0)
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0)
-            ),
-            "v": jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0)
-            ),
-        }
+        if getattr(pos0, "ndim", 0):
+            rows = jnp.arange(b)[:, None]
+            cols = pos0[:, None] + jnp.arange(s)[None, :]
+            new_cache = {
+                "k": cache["k"].at[rows, cols].set(
+                    k.astype(cache["k"].dtype)
+                ),
+                "v": cache["v"].at[rows, cols].set(
+                    v.astype(cache["v"].dtype)
+                ),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0)
+                ),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0)
+                ),
+            }
         k_all, v_all = new_cache["k"], new_cache["v"]
         t = k_all.shape[1]
         kpos = jnp.arange(t)
         kv_len = cache_len
         # SWA decode: only the last `window` positions can score — slice
         # them out so decode work is O(window), not O(max_seq)
-        if cfg.window is not None and s == 1 and t > cfg.window:
+        if cfg.window is not None and s == 1 and t > cfg.window and not per_row:
             w = cfg.window
             start = jnp.clip(
                 (cache_len if cache_len is not None else t) - w, 0, t - w
@@ -322,6 +356,7 @@ def attention_apply(
         and cache is not None
         and memory is None
         and cfg.window is None
+        and not per_row
     ):
         from repro.parallel.activations import current_mesh
 

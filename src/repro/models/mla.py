@@ -89,7 +89,8 @@ def _project_q(params, cfg: MLAConfig, x, positions):
     q = q.reshape(b, s, h, cfg.d_nope + cfg.d_rope)
     q_nope, q_rope = q[..., : cfg.d_nope], q[..., cfg.d_nope :]
     freqs = rope_frequencies(cfg.d_rope, cfg.rope_theta)
-    q_rope = apply_rope(q_rope, positions[None, :], freqs)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
+    q_rope = apply_rope(q_rope, pos_b, freqs)
     return q_nope, q_rope
 
 
@@ -98,7 +99,8 @@ def _compress_kv(params, cfg: MLAConfig, x, positions):
     c_kv = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora])
     k_rope = kv[..., cfg.kv_lora :]
     freqs = rope_frequencies(cfg.d_rope, cfg.rope_theta)
-    k_rope = apply_rope(k_rope, positions[None, :], freqs)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
+    k_rope = apply_rope(k_rope, pos_b, freqs)
     return c_kv, k_rope
 
 
@@ -106,10 +108,10 @@ def mla_apply(
     params,
     cfg: MLAConfig,
     x: jax.Array,  # [B,S,D]
-    positions: jax.Array,  # [S]
+    positions: jax.Array,  # [S] (shared) or [B,S] (per-row)
     cache: dict | None = None,
-    cache_pos: jax.Array | None = None,
-    cache_len: jax.Array | None = None,
+    cache_pos: jax.Array | None = None,  # scalar or [B]
+    cache_len: jax.Array | None = None,  # scalar or [B]
     absorbed: bool | None = None,
 ) -> tuple[jax.Array, dict | None]:
     b, s, d = x.shape
@@ -122,16 +124,28 @@ def mla_apply(
     new_cache = cache
     if cache is not None:
         pos0 = cache_pos if cache_pos is not None else jnp.int32(0)
-        new_cache = {
-            "c_kv": jax.lax.dynamic_update_slice(
-                cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype),
-                (0, pos0, 0),
-            ),
-            "k_rope": jax.lax.dynamic_update_slice(
-                cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
-                (0, pos0, 0),
-            ),
-        }
+        if getattr(pos0, "ndim", 0):  # per-row write offsets [B]
+            rows = jnp.arange(b)[:, None]
+            cols = pos0[:, None] + jnp.arange(s)[None, :]
+            new_cache = {
+                "c_kv": cache["c_kv"].at[rows, cols].set(
+                    c_kv_new.astype(cache["c_kv"].dtype)
+                ),
+                "k_rope": cache["k_rope"].at[rows, cols].set(
+                    k_rope_new.astype(cache["k_rope"].dtype)
+                ),
+            }
+        else:
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice(
+                    cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype),
+                    (0, pos0, 0),
+                ),
+                "k_rope": jax.lax.dynamic_update_slice(
+                    cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+                    (0, pos0, 0),
+                ),
+            }
         c_kv, k_rope = new_cache["c_kv"], new_cache["k_rope"]
         t = c_kv.shape[1]
         kpos = jnp.arange(t)
@@ -156,12 +170,20 @@ def mla_apply(
         s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
                             k_rope.astype(jnp.float32))
         scores = (s_lat + s_rope) * scale
-        qq = positions[:, None]
-        kk = kpos[None, :]
+        qq = positions[..., :, None]
+        kk = kpos[..., None, :]
         mask = qq >= kk
         if cache_len is not None:
-            mask &= kk < cache_len
-        scores = jnp.where(mask[None, None], scores, _NEG)
+            kv = (
+                cache_len[..., None, None]
+                if getattr(cache_len, "ndim", 0)
+                else cache_len
+            )
+            mask &= kk < kv
+        # scores are [B,h,S,T]: shared masks broadcast as [1,1,S,T],
+        # per-row masks as [B,1,S,T]
+        mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        scores = jnp.where(mask, scores, _NEG)
         p = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhst,btl->bshl", p, c_kv.astype(jnp.float32))
         out = jnp.einsum("bshl,lhv->bshv", o_lat, w_uv.astype(jnp.float32))

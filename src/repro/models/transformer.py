@@ -442,10 +442,10 @@ def apply_model(
     params,
     statics,
     tokens: jax.Array,  # [B, S] int32
-    positions: jax.Array | None = None,  # [S]
+    positions: jax.Array | None = None,  # [S] (shared) or [B, S] (per-row)
     cache=None,
-    cache_pos: jax.Array | None = None,
-    cache_len: jax.Array | None = None,
+    cache_pos: jax.Array | None = None,  # scalar or [B] (per-slot decode)
+    cache_len: jax.Array | None = None,  # scalar or [B]
     prefix_embeds: jax.Array | None = None,  # [B, P, d] (vlm stub)
     frames: jax.Array | None = None,  # [B, enc_seq, d] (audio stub)
 ):
@@ -463,7 +463,8 @@ def apply_model(
     if positions is None:
         positions = jnp.arange(s)
     if "dec_pos" in params:
-        x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(cdt)[None]
+        dp = jnp.take(params["dec_pos"], positions, axis=0).astype(cdt)
+        x = x + (dp if positions.ndim == 2 else dp[None])
     x = shard_activation(x, ("batch", "seq_shard", None))
 
     memory = None

@@ -26,6 +26,7 @@ from repro.obs.metrics import (
     Counter,
     Gauge,
     Histogram,
+    Meter,
     MetricsRegistry,
     get_registry,
 )
@@ -35,6 +36,7 @@ __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "Meter",
     "MetricsRegistry",
     "get_registry",
     "NULL_TRACER",

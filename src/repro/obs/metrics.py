@@ -27,12 +27,14 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from collections import deque
 
 __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "Meter",
     "MetricsRegistry",
     "DEFAULT_BUCKETS",
     "LATENCY_BUCKETS_S",
@@ -194,6 +196,71 @@ class Histogram:
         return lines
 
 
+class Meter:
+    """Windowed event-rate meter: events/s over a sliding time window.
+
+    Serving front ends use it for *sustained* throughput (req/s over the
+    last ``window_s``), which a monotonic :class:`Counter` cannot give
+    without a scraper differentiating it.  ``mark(n)`` records *n* events
+    now; :attr:`rate` is events/s over the retained window (0 until the
+    first mark).  ``clock`` is injectable for deterministic tests.
+    """
+
+    kind = "meter"
+
+    def __init__(self, window_s: float = 10.0, clock=time.monotonic):
+        if window_s <= 0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        self.window_s = float(window_s)
+        self._clock = clock
+        self._events: deque[tuple[float, float]] = deque()
+        self._total = 0.0
+        self._lock = threading.Lock()
+
+    def _prune(self, now: float) -> None:
+        horizon = now - self.window_s
+        while self._events and self._events[0][0] < horizon:
+            self._events.popleft()
+
+    def mark(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"meter mark must be >= 0, got {n}")
+        now = self._clock()
+        with self._lock:
+            self._total += n
+            self._events.append((now, float(n)))
+            self._prune(now)
+
+    @property
+    def total(self) -> float:
+        return self._total
+
+    @property
+    def rate(self) -> float:
+        """Events/s over the sliding window."""
+        now = self._clock()
+        with self._lock:
+            self._prune(now)
+            if not self._events:
+                return 0.0
+            n = sum(c for _, c in self._events)
+            # measure over the elapsed fraction of the window so a burst
+            # younger than window_s is not diluted by empty history
+            span = max(now - self._events[0][0], 1e-9)
+        return n / min(max(span, 1e-3), self.window_s)
+
+    def snapshot(self) -> dict:
+        return {"total": self._total, "rate_per_s": self.rate}
+
+    def prom_lines(self, name: str) -> list[str]:
+        return [
+            f"# TYPE {name}_total counter",
+            f"{name}_total {_fmt(self._total)}",
+            f"# TYPE {name}_rate_per_s gauge",
+            f"{name}_rate_per_s {_fmt(self.rate)}",
+        ]
+
+
 def _fmt(v: float) -> str:
     """Prometheus-friendly number: integral values without the '.0'."""
     return str(int(v)) if float(v).is_integer() and abs(v) < 1e15 else repr(v)
@@ -237,6 +304,11 @@ class MetricsRegistry:
             name,
             "histogram",
             lambda: Histogram(buckets or DEFAULT_BUCKETS, max_samples),
+        )
+
+    def meter(self, name: str, window_s: float = 10.0) -> Meter:
+        return self._get_or_create(
+            name, "meter", lambda: Meter(window_s=window_s)
         )
 
     def register(self, name: str, metric) -> None:

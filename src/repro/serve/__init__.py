@@ -1,0 +1,44 @@
+"""``repro.serve`` — the unified serving surface.
+
+One contract (:class:`Request`/:class:`Response`), one verb set
+(``submit``/``stream``/``run`` on :class:`ServeSession`), and one HTTP
+front door (:class:`ServingServer`) over both serving backends:
+
+  * classification — ``engine.service.InferenceService`` over a compiled
+    crossbar program (``classify_session(program)``);
+  * generation — ``runtime.serve.DecodeService`` with per-slot mid-decode
+    admission (``generate_session(cfg, statics, params, scfg)``).
+
+``api`` is imported eagerly (it is leaf-level: stdlib + numpy, no repro
+imports, so ``engine``/``runtime`` modules can depend on it without
+cycles); the session facade and HTTP server — which pull in the heavy
+engine/runtime stacks — load lazily on first attribute access.
+"""
+
+from repro.serve.api import Overloaded, Request, Response
+
+__all__ = [
+    "Overloaded",
+    "Request",
+    "Response",
+    "ServeSession",
+    "classify_session",
+    "generate_session",
+    "ServingServer",
+]
+
+_LAZY = {
+    "ServeSession": "repro.serve.session",
+    "classify_session": "repro.serve.session",
+    "generate_session": "repro.serve.session",
+    "ServingServer": "repro.serve.server",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

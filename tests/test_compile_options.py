@@ -1,0 +1,150 @@
+"""CompileOptions: the one-object compile surface.
+
+Pins the API-redesign contract: ``compile_network(options=...)`` is the
+preferred form, the historical loose kwargs keep working as deprecated
+aliases (warning, but compiling a *bit-identical* program), and the two
+forms cannot be mixed.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pruning import (
+    build_dictionaries,
+    magnitude_prune,
+    project_params,
+)
+from repro.engine import CompileOptions, EngineConfig, compile_network
+from repro.models.cnn import conv_weight_names, init_cnn, mini_cnn_config
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = mini_cnn_config(num_classes=4, input_hw=12, widths=(8, 16, 16))
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    names = conv_weight_names(cfg)
+    params = magnitude_prune(params, names, 0.7)
+    dicts = build_dictionaries(params, names, 4)
+    params, bits = project_params(params, dicts)
+    return cfg, params, bits
+
+
+def _bp_arrays(bp):
+    arrs = [bp.w_comp, bp.block_ids, bp.nnz, bp.new_order, bp.inv_order]
+    if bp.w_scales is not None:
+        arrs.append(bp.w_scales)
+    return [np.asarray(a) for a in arrs]
+
+
+def assert_programs_identical(a, b):
+    """Every stored operand of two compiled programs is bit-equal."""
+    assert (a.block, a.tile, a.precision, a.cell_bits) == (
+        b.block, b.tile, b.precision, b.cell_bits
+    )
+    assert len(a.convs) == len(b.convs)
+    for ca, cb in zip(a.convs, b.convs):
+        assert ca.name == cb.name
+        np.testing.assert_array_equal(ca.bias, cb.bias)
+        np.testing.assert_array_equal(ca.pattern_bits, cb.pattern_bits)
+        for xa, xb in zip(_bp_arrays(ca.bp), _bp_arrays(cb.bp)):
+            np.testing.assert_array_equal(xa, xb)
+    np.testing.assert_array_equal(a.fc.bias, b.fc.bias)
+    for xa, xb in zip(_bp_arrays(a.fc.bp), _bp_arrays(b.fc.bp)):
+        np.testing.assert_array_equal(xa, xb)
+
+
+def test_options_form_does_not_warn(mini):
+    cfg, params, bits = mini
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        compile_network(cfg, params, bits, options=CompileOptions())
+        compile_network(cfg, params, bits)  # bare call is not deprecated
+
+
+@pytest.mark.parametrize(
+    "kwargs, options",
+    [
+        (
+            dict(ecfg=EngineConfig(block=16, tile=16)),
+            CompileOptions(block=16, tile=16),
+        ),
+        (
+            dict(precision="int8"),
+            CompileOptions(precision="int8"),
+        ),
+        (
+            dict(ecfg=EngineConfig(block=16, tile=16, cell_bits=2),
+                 precision="int8", verify="strict"),
+            CompileOptions(block=16, tile=16, cell_bits=2,
+                           precision="int8", verify="strict"),
+        ),
+    ],
+)
+def test_kwargs_alias_round_trip_bit_identical(mini, kwargs, options):
+    """Deprecated kwargs warn but compile the same bits as options=."""
+    cfg, params, bits = mini
+    with pytest.warns(DeprecationWarning, match="CompileOptions"):
+        legacy = compile_network(cfg, params, bits, **kwargs)
+    new = compile_network(cfg, params, bits, options=options)
+    assert_programs_identical(legacy, new)
+
+
+def test_positional_ecfg_slot_still_works(mini):
+    """CI's analysis job passes EngineConfig in the 4th positional slot;
+    that call shape must keep compiling (with a deprecation warning)."""
+    cfg, params, bits = mini
+    e = EngineConfig(block=16, tile=16)
+    with pytest.warns(DeprecationWarning):
+        prog = compile_network(cfg, params, bits, e, verify="strict")
+    assert_programs_identical(
+        prog,
+        compile_network(
+            cfg, params, bits,
+            options=CompileOptions.from_engine_config(e, verify="strict"),
+        ),
+    )
+
+
+def test_options_cannot_mix_with_legacy_kwargs(mini):
+    cfg, params, bits = mini
+    with pytest.raises(TypeError, match="deprecated kwarg"):
+        compile_network(
+            cfg, params, bits, precision="int8", options=CompileOptions()
+        )
+
+
+def test_options_validation():
+    with pytest.raises(ValueError, match="precision"):
+        CompileOptions(precision="fp16")
+    with pytest.raises(ValueError, match="cell_bits"):
+        CompileOptions(cell_bits=0)
+    with pytest.raises(ValueError, match="verify"):
+        CompileOptions(verify="bogus")
+    with pytest.raises(ValueError, match="optimize"):
+        CompileOptions(optimize=42)
+
+
+def test_engine_config_projection_round_trips():
+    e = EngineConfig(block=16, tile=32, precision="int8", cell_bits=2)
+    opts = CompileOptions.from_engine_config(e, verify="warn")
+    assert opts.engine_config() == e
+    assert opts.verify == "warn"
+    assert dataclasses.replace(opts, verify=None).engine_config() == e
+
+
+def test_options_carry_tracer(mini):
+    """The tracer rides inside options: compile spans land on it."""
+    cfg, params, bits = mini
+    tr = Tracer()
+    compile_network(
+        cfg, params, bits,
+        options=CompileOptions(block=16, tile=16, tracer=tr),
+    )
+    names = {e["name"] for e in tr.events()}
+    assert "compile_network" in names
+    assert "lower:fc" in names

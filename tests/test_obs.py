@@ -253,6 +253,43 @@ def test_registry_get_or_create_and_kind_conflicts():
     assert "scheduler_queue_depth 1" in r.to_prometheus()
 
 
+def test_meter_windowed_rate():
+    from repro.obs.metrics import Meter
+
+    t = {"now": 0.0}
+    m = Meter(window_s=10.0, clock=lambda: t["now"])
+    assert m.rate == 0.0 and m.total == 0.0
+    m.mark(5)
+    t["now"] = 2.0
+    assert m.total == 5.0
+    assert m.rate == pytest.approx(5.0 / 2.0)  # over the elapsed span
+    m.mark(5)
+    t["now"] = 4.0
+    assert m.rate == pytest.approx(10.0 / 4.0)
+    # events older than the window fall out of the rate, not the total
+    t["now"] = 20.0
+    assert m.rate == 0.0
+    assert m.total == 10.0
+    lines = m.prom_lines("serve_requests")
+    assert "serve_requests_total 10" in lines
+    with pytest.raises(ValueError):
+        m.mark(-1)
+    with pytest.raises(ValueError):
+        Meter(window_s=0)
+
+
+def test_meter_in_registry():
+    r = MetricsRegistry()
+    m = r.meter("reqs", window_s=5.0)
+    assert r.meter("reqs") is m
+    with pytest.raises(ValueError):
+        r.counter("reqs")  # kind conflict
+    m.mark(3)
+    assert r.snapshot()["reqs"]["kind"] == "meter"
+    assert r.snapshot()["reqs"]["value"]["total"] == 3.0
+    assert "reqs_total 3" in r.to_prometheus()
+
+
 def test_global_registry_reset_isolation():
     reg = get_registry()
     reg.reset()

@@ -178,6 +178,127 @@ def test_latency_percentiles_and_wait_breakdown():
     assert "test_sched_latency_seconds_count 100" in text
 
 
+def test_first_result_latency_and_complete_fallback():
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=2, clock=clock)
+    s.submit("a")  # enqueued at t=0
+    clock.t = 1.0
+    s.refill()
+    clock.t = 3.0
+    s.record_first_result(0)  # first usable output: 3.0 after enqueue
+    s.record_first_result(0)  # idempotent per occupancy
+    clock.t = 5.0
+    s.complete(0)
+    m = s.metrics
+    assert m.first_results == 1
+    assert m.first_result_mean == pytest.approx(3.0)
+    assert m.latency_mean == pytest.approx(5.0)  # completion unaffected
+    # single-step workloads never call record_first_result: complete()
+    # records the fallback so the SLO series is populated either way
+    s.submit("b")  # t=5
+    s.refill()
+    clock.t = 6.5
+    s.complete(0)
+    assert s.metrics.first_results == 2
+    assert s.metrics.first_result_sum == pytest.approx(3.0 + 1.5)
+    snap = s.snapshot()
+    assert snap["first_result_mean_s"] == pytest.approx(2.25)
+    assert snap["first_result_p99_s"] == pytest.approx(3.0)
+    text = s.metrics.to_prometheus(prefix="svc")
+    assert "svc_first_result_seconds_count 2" in text
+
+
+def test_retry_after_hint_tracks_backpressure():
+    clock = FakeClock()
+    s = SlotScheduler(batch_slots=2, clock=clock)
+    base = s.retry_after_hint()  # pre-traffic fallback, still positive
+    assert 0 < base <= 60.0
+    for i in range(6):
+        s.submit(i)
+    assert s.retry_after_hint() > base  # deeper queue -> longer hint
+    # once steps have run, the hint uses the measured step cadence
+    s.refill()
+    s.record_step()
+    clock.t = 0.2
+    s.record_step()  # inter-step wall time: 0.2s
+    # 4 queued + the retrying request = ceil(5/2) = 3 waves x 0.2s
+    assert s.retry_after_hint() == pytest.approx(3 * 0.2)
+
+
+def test_resubmit_is_a_priority_lane():
+    s = SlotScheduler(batch_slots=1, max_queue=1)
+    s.submit("a")
+    assert not s.try_submit("b")  # bounded queue is full
+    s.resubmit("replay")  # admitted work bypasses max_queue...
+    assert s.queued() == 2
+    assert s.refill() == [(0, "replay")]  # ...and jumps the line
+    s.complete(0)
+    assert s.refill() == [(0, "a")]
+    s.complete(0)
+
+
+def test_scheduler_thread_safe_under_concurrent_load():
+    """Producers try_submit from several threads while a consumer
+    refills/steps/completes and a scraper snapshots: bookkeeping must
+    conserve every request (this is the HTTP server's exact topology:
+    event-loop admission + worker stepping + /metrics scraping)."""
+    import threading
+
+    s = SlotScheduler(batch_slots=4)
+    n_threads, per_thread = 4, 200
+    total = n_threads * per_thread
+    errors, done = [], []
+    stop_scraper = threading.Event()
+
+    def producer(base):
+        try:
+            for i in range(per_thread):
+                s.submit((base, i))
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def consumer():
+        try:
+            import time as _t
+            deadline = _t.monotonic() + 60
+            while len(done) < total and _t.monotonic() < deadline:
+                s.refill()
+                if s.live():
+                    s.record_step()
+                    for slot, _item in list(s.live()):
+                        done.append(s.complete(slot))
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def scraper():
+        try:
+            while not stop_scraper.is_set():
+                snap = s.snapshot()
+                assert snap["enqueued"] >= snap["completed"]
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=producer, args=(b,)) for b in range(n_threads)
+    ] + [threading.Thread(target=consumer), threading.Thread(target=scraper)]
+    for t in threads[:-1]:
+        t.start()
+    threads[-1].start()
+    for t in threads[:-1]:
+        t.join(timeout=120)
+    stop_scraper.set()
+    threads[-1].join(timeout=10)
+
+    assert not errors, errors
+    assert len(done) == total
+    assert sorted(done) == sorted(
+        (b, i) for b in range(n_threads) for i in range(per_thread)
+    )
+    m = s.metrics
+    assert m.enqueued == m.completed == total
+    assert s.queued() == 0 and not s.live()
+
+
 def test_scheduler_emits_request_lifecycle_spans():
     """With a tracer, each request becomes an async begin/admit/end trio
     and queue depth / live slots land as counter tracks."""
@@ -196,7 +317,11 @@ def test_scheduler_emits_request_lifecycle_spans():
     s.complete(1)
     ev = tr.events()
     begins = [e for e in ev if e["ph"] == "b" and e["cat"] == "request"]
-    admits = [e for e in ev if e["ph"] == "n" and e["cat"] == "request"]
+    admits = [
+        e for e in ev
+        if e["ph"] == "n" and e["cat"] == "request"
+        and e["args"].get("event") == "admit"
+    ]
     ends = [e for e in ev if e["ph"] == "e" and e["cat"] == "request"]
     assert len(begins) == len(admits) == len(ends) == 2
     # lifecycles are keyed so Perfetto can pair them up

@@ -63,7 +63,8 @@ def test_lm_train_then_serve(tmp_path):
     from repro.data.pipeline import DataConfig, SyntheticCorpus, packed_batches
     from repro.models.transformer import init_params
     from repro.optim import adamw
-    from repro.runtime.serve import Request, ServeConfig, ServeLoop
+    from repro.runtime.serve import ServeConfig, ServeLoop
+    from repro.serve import Request
     from repro.runtime.train import (
         TrainConfig,
         Trainer,
@@ -100,7 +101,8 @@ def test_lm_train_then_serve(tmp_path):
 def test_serve_loop_handles_more_requests_than_slots():
     from repro.configs import get_smoke_config
     from repro.models.transformer import init_params
-    from repro.runtime.serve import Request, ServeConfig, ServeLoop
+    from repro.runtime.serve import ServeConfig, ServeLoop
+    from repro.serve import Request
 
     cfg = get_smoke_config("mamba2_780m")
     params, _, statics = init_params(cfg, jax.random.PRNGKey(0))
