@@ -733,6 +733,56 @@ def _verify_overhead() -> dict:
     }
 
 
+def _ranges_overhead() -> dict:
+    """Range-certification cost relative to compile on the synthetic VGG.
+
+    Both stored precisions are compiled once and range-analyzed twice
+    (best-of-2 removes timer noise).  ``check_baseline.py`` gates
+    ``overhead_frac`` at < 1.5x compile time (the pass touches every
+    stored weight, so its floor is compile-comparable — the gate stops
+    regressions, not physics), ``errors == 0`` on both precisions, and
+    ``deterministic`` — two independent analyses of the same program
+    must produce byte-identical certificates.  Warnings are reported
+    but not gated: the deep VGG legitimately exceeds the fp32 range
+    through the channel-norm eps division (rule V504).
+    """
+    from repro.analysis.ranges import analyze_network
+
+    cfg, params, bits = _synthetic_vgg()
+    compile_s = ranges_s = 0.0
+    errors = warnings_ = 0
+    deterministic = True
+    certified_cells: dict = {}
+    for precision in ("fp32", "int8"):
+        t0 = time.perf_counter()
+        prog = compile_network(
+            cfg, params, bits, options=CompileOptions(precision=precision)
+        )
+        compile_s += time.perf_counter() - t0
+        times = []
+        manifests = []
+        for _ in range(2):
+            t0 = time.perf_counter()
+            report, cert = analyze_network(prog)
+            times.append(time.perf_counter() - t0)
+            manifests.append(cert.to_manifest())
+        ranges_s += min(times)
+        deterministic &= manifests[0] == manifests[1]
+        errors += len(report.errors)
+        warnings_ += len(report.warnings)
+        if precision == "int8":
+            certified_cells = cert.certified_cells()
+    return {
+        "compile_s": compile_s,
+        "ranges_s": ranges_s,
+        "overhead_frac": ranges_s / max(compile_s, 1e-9),
+        "errors": errors,
+        "warnings": warnings_,
+        "deterministic": deterministic,
+        "certified_cells": certified_cells,
+    }
+
+
 def collect(quick: bool = False, smoke: bool = False,
             tracer: Tracer | None = None) -> dict:
     sparsities = SPARSITIES[1:2] if (quick or smoke) else SPARSITIES
@@ -763,6 +813,7 @@ def collect(quick: bool = False, smoke: bool = False,
         ),
         "consistency": _consistency_check(),
         "verify": _verify_overhead(),
+        "ranges": _ranges_overhead(),
         "mapping": _mapping_entry(smoke),
     }
     return report

@@ -24,6 +24,15 @@ static verifier must report zero errors on the bench-compiled programs
 and cost less than ``VERIFY_OVERHEAD_CEIL`` of compile time — a ratio,
 so machine speed cancels.
 
+The ``ranges`` entry is gated absolutely too: the range-certification
+pass must report zero errors on both bench precisions, produce
+byte-identical certificates across independent analyses of the same
+program, and cost less than ``RANGES_OVERHEAD_CEIL`` times compile
+time (it touches every stored weight, so its floor — unlike the
+metadata-only verifier's — is comparable to compile's packing work).
+Warnings are not gated — the deep VGG legitimately trips the V504
+fp32-range warning through the channel-norm eps division.
+
 The ``mapping`` entry gates the design-space search the same two ways:
 the Pareto guarantee (searched never worse than the fixed paper scheme
 on area *and* energy, at least one model strictly improved), the
@@ -79,6 +88,12 @@ MAX_ABS_DIFF_CEIL = 1e-2  # engine vs dense fp32 logits
 # boundary: < 10% of compile time on the bench mini network (an absolute
 # ratio gate — machine speed cancels, so no baseline entry is needed)
 VERIFY_OVERHEAD_CEIL = 0.10
+# the range-certification pass touches every stored weight (interval
+# transfer + cell-budget table, ~4 full passes), so unlike the
+# metadata-only verifier its floor is comparable to compile's own
+# packing work (~0.8x measured).  The gate keeps it from regressing
+# past compile itself: < 1.5x compile time, same absolute ratio gate
+RANGES_OVERHEAD_CEIL = 1.5
 # the HTTP front end must keep the batch nearly full under the bursty
 # trace (an absolute gate — no baseline entry needed): continuous
 # batching is the point, so a mostly-idle batch is a regression even if
@@ -271,6 +286,28 @@ def compare(current, baseline, time_tol, top1_slack) -> Checker:
             f"{VERIFY_OVERHEAD_CEIL:.0%} "
             f"(compile {vf.get('compile_s', 0):.3f}s, "
             f"verify {vf.get('verify_s', 0):.3f}s)",
+        )
+
+    rg = current.get("ranges")
+    c.check(rg is not None, "ranges overhead entry missing")
+    if rg:
+        c.check(
+            rg.get("errors", 1) == 0,
+            f"range certification found {rg.get('errors')} error(s) in "
+            "the bench-compiled programs",
+        )
+        c.check(
+            rg.get("deterministic") is True,
+            "range certificates differ across analyses of the same "
+            "program",
+        )
+        frac = rg.get("overhead_frac", 1.0)
+        c.check(
+            frac <= RANGES_OVERHEAD_CEIL,
+            f"ranges overhead {frac:.2f}x compile time exceeds "
+            f"{RANGES_OVERHEAD_CEIL:.1f}x "
+            f"(compile {rg.get('compile_s', 0):.3f}s, "
+            f"ranges {rg.get('ranges_s', 0):.3f}s)",
         )
 
     sh = current.get("sharded", {})

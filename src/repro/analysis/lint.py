@@ -25,6 +25,13 @@ L005   no new internal imports of the deprecated serving request types
        ``repro.runtime.serve.Request``) — internal code uses the unified
        ``repro.serve.Request``; the shims exist only for external
        callers during the deprecation window
+L006   lock discipline: in a class that holds a ``threading.Lock`` /
+       ``RLock`` attribute, every method that mutates shared instance
+       state (attributes assigned in ``__init__``) must do so inside a
+       ``with self.<lock>`` block — an unlocked write to state the lock
+       exists to protect is a data race by construction.  Assignments in
+       ``__init__`` (pre-publication) and in nested ``def``s (unknown
+       calling context) are exempt
 =====  =================================================================
 
 Reachability for L001 is a best-effort static call graph: functions
@@ -501,6 +508,152 @@ def _rule_l005(r: Report, mod: _Module):
             )
 
 
+_LOCK_CTORS = {"Lock", "RLock"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.X`` or ``self.X[...]`` -> ``"X"``; anything else -> None."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _is_lock_ctor(mod: _Module, value: ast.AST) -> bool:
+    if not isinstance(value, ast.Call):
+        return False
+    chain = _dotted(value.func) or ()
+    if not chain or chain[-1] not in _LOCK_CTORS:
+        return False
+    root = mod.mod_aliases.get(chain[0], chain[0])
+    if root.split(".")[0] == "threading":
+        return True
+    # `from threading import Lock` / `RLock`
+    src, orig = mod.from_imports.get(chain[0], ("", ""))
+    return len(chain) == 1 and src.split(".")[-1] == "threading" and (
+        orig in _LOCK_CTORS
+    )
+
+
+class _LockScan(ast.NodeVisitor):
+    """Record ``self.<shared>`` mutations made outside ``with self.<lock>``.
+
+    Nested ``def``/``lambda`` bodies are skipped entirely: a closure
+    defined under a lock may run after it is released (and vice versa),
+    so neither flagging nor excusing it is sound.
+    """
+
+    def __init__(self, lock_attrs: set, shared: set):
+        self.lock_attrs = lock_attrs
+        self.shared = shared
+        self.depth = 0  # nesting level of with-self.<lock> blocks
+        self.offences: list[tuple[int, str]] = []
+
+    def _record(self, target: ast.AST, lineno: int):
+        attr = _self_attr(target)
+        if attr in self.shared and self.depth == 0:
+            self.offences.append((lineno, attr))
+
+    def _visit_with(self, node):
+        locked = any(
+            _self_attr(item.context_expr) in self.lock_attrs
+            for item in node.items
+        )
+        self.depth += locked
+        self.generic_visit(node)
+        self.depth -= locked
+
+    visit_With = _visit_with
+    visit_AsyncWith = _visit_with
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._record(t, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._record(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        if node.value is not None:
+            self._record(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete):
+        for t in node.targets:
+            self._record(t, node.lineno)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):  # skip nested defs
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+def _rule_l006(r: Report, mod: _Module):
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        methods = [
+            n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        lock_attrs = {
+            attr
+            for m in methods
+            for node in ast.walk(m)
+            if isinstance(node, ast.Assign) and _is_lock_ctor(mod, node.value)
+            for attr in map(_self_attr, node.targets)
+            if attr
+        }
+        if not lock_attrs:
+            continue
+        shared: set[str] = set()
+        for m in methods:
+            if m.name != "__init__":
+                continue
+            for node in ast.walk(m):
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target] if isinstance(node, ast.AnnAssign)
+                    else []
+                )
+                for t in targets:
+                    # plain `self.x = ...` only — subscripts in __init__
+                    # are construction detail, not attribute declaration
+                    if isinstance(t, ast.Attribute):
+                        attr = _self_attr(t)
+                        if attr:
+                            shared.add(attr)
+        shared -= lock_attrs
+        if not shared:
+            continue
+        locks = "/".join(f"self.{a}" for a in sorted(lock_attrs))
+        for m in methods:
+            if m.name == "__init__":
+                continue
+            scan = _LockScan(lock_attrs, shared)
+            for stmt in m.body:
+                scan.visit(stmt)
+            for lineno, attr in scan.offences:
+                if _allowed(mod, "L006", lineno, m.lineno):
+                    continue
+                r.add(
+                    "L006",
+                    f"{cls.name}.{m.name}() mutates self.{attr} outside a "
+                    f"`with {locks}` block — shared state in a "
+                    "lock-holding class must be mutated under the lock",
+                    layer=mod.name, location=_loc(mod, lineno),
+                )
+
+
 def lint_paths(paths: list[str]) -> Report:
     """Lint *paths* (files or directories) and return a Report."""
     mods = _parse(paths)
@@ -520,6 +673,7 @@ def lint_paths(paths: list[str]) -> Report:
             "repro.obs"
         )
         _rule_l005(r, mod)
+        _rule_l006(r, mod)
         for f in mod.funcs.values():
             if f.key in reachable:
                 _rule_l001(r, mod, f)

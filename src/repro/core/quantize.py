@@ -44,6 +44,7 @@ __all__ = [
     "WEIGHT_BITS",
     "QMAX",
     "n_cell_slices",
+    "cells_for_magnitude",
     "group_scales",
     "quantize_groups",
     "dequantize_groups",
@@ -67,6 +68,37 @@ def n_cell_slices(cell_bits: int = 4, weight_bits: int = WEIGHT_BITS) -> int:
     if cell_bits < 1:
         raise ValueError(f"cell_bits must be >= 1, got {cell_bits}")
     return -(-weight_bits // cell_bits)
+
+
+def cells_for_magnitude(
+    mag, cell_bits: int = 4, weight_bits: int = WEIGHT_BITS
+) -> np.ndarray:
+    """Minimum cell slices needed to store magnitudes exactly.
+
+    ``mag``: non-negative integer magnitudes (scalar or array), the
+    largest |q| a row-group holds in some integer grid.  A magnitude of
+    ``m`` needs ``bit_length(m)`` magnitude bits plus the sign bit of
+    the sign-magnitude cell layout (:func:`cell_slices`), so
+    ``ceil((bit_length(m) + 1) / cell_bits)`` cells; all-zero groups
+    need none.  The result never exceeds :func:`n_cell_slices` for
+    magnitudes within the ``weight_bits`` budget — this is the
+    range→cell-count map the certification pass
+    (``repro.analysis.ranges``) tabulates per OU row-group.
+    """
+    if cell_bits < 1:
+        raise ValueError(f"cell_bits must be >= 1, got {cell_bits}")
+    m = np.asarray(mag, np.int64)
+    if m.size and m.min() < 0:
+        raise ValueError("magnitudes must be non-negative")
+    if m.size and m.max() >= (1 << (weight_bits - 1)):
+        raise ValueError(
+            f"magnitude {int(m.max())} exceeds the {weight_bits}-bit "
+            "signed weight budget"
+        )
+    # bit_length(m) for integer m > 0 is exactly frexp's binary exponent
+    bits = np.frexp(m.astype(np.float64))[1].astype(np.int64)
+    cells = -(-(bits + 1) // cell_bits)
+    return np.where(m > 0, cells, 0)
 
 
 def group_scales(w: np.ndarray, group_ndim: int = 2) -> np.ndarray:

@@ -153,8 +153,33 @@ location string; ``Report.format()`` renders them one per line.
 Warnings (e.g. over-allocated ``k_max``, non-canonical pack order)
 never raise — only errors do.  The companion trace-safety lint
 (``python -m repro.analysis lint src/repro``) runs in CI and keeps
-wall-clock reads, host RNG, and unsynchronized timing out of
-jit-reachable code.
+wall-clock reads, host RNG, unsynchronized timing, and unlocked
+shared-state mutation out of the source tree.
+
+Certification
+-------------
+Verification proves the program is *well-formed*; the range
+certification pass (``repro.analysis.ranges``) proves facts about what
+it can *compute*.  It is an abstract interpreter over the compiled
+schedule: from a declared input interval it propagates sound activation
+bounds through every layer (spmm -> channel-norm -> relu -> pool ->
+head) and derives activation-independent worst-case accumulator extrema
+for the quantized path.  Structural rules are ``V1xx``–``V4xx``/
+``M0xx``; semantic rules are ``V5xx`` (accumulator overflow, scale
+saturation/denormal, dead scale groups, range divergence, unreachable
+cell slices, stale stored certificates).
+
+When ``compile_network(..., verify=...)`` is on, the pass runs right
+after verification and attaches a ``RangeCertificate`` to the program:
+per-layer activation bounds plus a certified minimum cells-per-weight
+table on the layer's reference scale grid.  The certificate rides in
+manifest v4 (v1–v3 saves still load, without one),
+``hardware_report()`` prices it as a ``certified_potential`` section
+(certified-vs-stored crossbar area/energy, exactly on the simulator's
+own cost chain), and ``python -m repro.analysis ranges <dir>`` recomputes
+and cross-checks it for a saved program (rule ``V506`` fires if the
+stored certificate disagrees).  ``python -m repro.analysis all <dir>``
+runs verify + lint + ranges with one merged JSON report.
 """
 
 from repro.engine.executor import (

@@ -333,6 +333,11 @@ def compile_network(
         :class:`~repro.analysis.diagnostics.VerificationError` on any
         error diagnostic, ``'warn'`` emits a Python warning instead,
         ``None`` (default) skips the pass on this hot compile path.
+        When the structural pass is clean, the range certification pass
+        (``repro.analysis.ranges``, its own ``ranges`` compile span)
+        also runs: V5xx diagnostics join the same report and the
+        resulting :class:`~repro.analysis.ranges.RangeCertificate` is
+        attached as ``program.certificate``.
       optimize: deprecated alias of ``CompileOptions(optimize=...)``:
         per-layer mapping design-space search
         (``core/mapsearch.py``) — ``'auto'`` uses the default
@@ -451,10 +456,23 @@ def compile_network(
         precision=ecfg.precision, cell_bits=ecfg.cell_bits,
     )
     if verify is not None:
+        from repro.analysis.ranges import analyze_network
         from repro.analysis.verify import verify_network
 
         with tracer.span("verify", cat="compile"):
             report = verify_network(program)
+        # the range certification pass only runs over structurally sound
+        # programs (its interval math assumes the verifier's contracts);
+        # V5xx diagnostics land in the same report, the certificate rides
+        # on the program (priced by hardware_report, saved in manifest v4)
+        if report.ok:
+            with tracer.span("ranges", cat="compile") as sp:
+                report, cert = analyze_network(program, report=report)
+                program.certificate = cert
+                sp.args.update(
+                    fp32_safe=cert.fp32_safe,
+                    certified_cells=cert.certified_cells(),
+                )
         if verify == "strict":
             report.raise_if_errors("compile_network")
         elif not report.ok:

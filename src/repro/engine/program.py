@@ -22,7 +22,7 @@ from repro.core.crossbar import EnergyModel
 from repro.core.mapping import CrossbarConfig, MappingCandidate
 from repro.core.quantize import WEIGHT_BITS, n_cell_slices
 from repro.core.patterns import PatternDict
-from repro.core.simulator import drift_table, simulate_layer_multi
+from repro.core.simulator import drift_table, mapping_cost, simulate_layer_multi
 from repro.core.sparse import BlockPatternWeight, block_density
 from repro.core.synthetic import LayerSpec, SyntheticLayer
 from repro.engine.partition import NetworkPartition, tile_assignment
@@ -96,6 +96,14 @@ class CompiledNetwork:
     ``hardware_report`` prices crossbar area from the *stored* cell-slice
     count instead of the assumed-width default whenever the program is
     quantized.
+
+    ``certificate`` (optional) is the
+    :class:`~repro.analysis.ranges.RangeCertificate` the certification
+    pass attaches (``compile_network(verify=...)``): certified activation
+    bounds, accumulator extrema, and the per-OU-row-group minimum
+    cells-per-weight table.  ``hardware_report`` prices it as the
+    ``certified_potential`` section; ``serialize.py`` persists it
+    (manifest v4).
     """
 
     config: CNNConfig
@@ -106,6 +114,7 @@ class CompiledNetwork:
     partition: NetworkPartition | None = None
     precision: str = "fp32"
     cell_bits: int = 4
+    certificate: object | None = None
 
     @property
     def cells_per_weight(self) -> int | None:
@@ -245,6 +254,83 @@ class CompiledNetwork:
             "parallel_speedup": total_cycles / max(cycles_parallel, 1e-9),
         }
 
+    def _certified_potential(
+        self, config: CrossbarConfig, energy: EnergyModel
+    ) -> dict:
+        """Price what the certificate's min-cell table would unlock.
+
+        Each conv is re-priced via ``core/simulator.mapping_cost`` — the
+        exact chain ``hardware_report``'s own rows come from — twice: at
+        its effective candidate (the searched mapping, or the reference
+        ``config`` as a candidate) and at the same candidate with
+        ``cells_per_weight`` replaced by the layer's *certified* cell
+        count.  The "current" numbers therefore match the report's layer
+        rows bit for bit (zero drift, property-tested), and the deltas
+        are the area/energy a variable-cell (MSR-style) lowering of the
+        ROADMAP's sub-4-bit item would provably unlock.
+        """
+        cert = self.certificate
+        if self.precision != "int8":
+            return {
+                "available": False,
+                "reason": "range certificates price cell storage; this "
+                          "program stores fp32 weights",
+            }
+        rows = []
+        for c in self.convs:
+            entry = cert.layer(c.name)
+            if entry is None or entry.certified_cells is None:
+                continue
+            cand = c.mapping if c.mapping is not None else MappingCandidate(
+                rows=config.rows,
+                cols=config.cols,
+                cells_per_weight=config.cells_per_weight,
+                ou_rows=config.ou_rows,
+                ou_cols=config.ou_cols,
+            )
+            # an all-zero layer certifies 0 cells; it still occupies one
+            # cell per weight in any real lowering
+            certified = max(int(entry.certified_cells), 1)
+            bits = np.asarray(c.pattern_bits, np.int64)
+            windows = c.out_hw * c.out_hw
+            ksize = c.kernel * c.kernel
+            cur = mapping_cost(bits, cand, windows, ksize, energy)
+            new = mapping_cost(
+                bits,
+                dataclasses.replace(cand, cells_per_weight=certified),
+                windows, ksize, energy,
+            )
+            rows.append({
+                "name": c.name,
+                "stored_cells": cand.cells_per_weight,
+                "certified_cells": certified,
+                "area_cells": cur.area_cells,
+                "certified_area_cells": new.area_cells,
+                "energy_pj": cur.energy_pj,
+                "certified_energy_pj": new.energy_pj,
+                "cycles": cur.cycles,
+                "certified_cycles": new.cycles,
+            })
+        area = float(sum(r["area_cells"] for r in rows))
+        c_area = float(sum(r["certified_area_cells"] for r in rows))
+        e_cur = float(sum(r["energy_pj"] for r in rows))
+        c_e = float(sum(r["certified_energy_pj"] for r in rows))
+        return {
+            "available": True,
+            "fp32_safe": bool(getattr(cert, "fp32_safe", True)),
+            "input_range": [
+                float(getattr(cert, "input_lo", 0.0)),
+                float(getattr(cert, "input_hi", 0.0)),
+            ],
+            "layers": rows,
+            "area_cells": int(area),
+            "certified_area_cells": int(c_area),
+            "energy_pj": e_cur,
+            "certified_energy_pj": c_e,
+            "area_win": area / max(c_area, 1e-9),
+            "energy_win": e_cur / max(c_e, 1e-9),
+        }
+
     def hardware_report(
         self,
         config: CrossbarConfig = CrossbarConfig(),
@@ -314,6 +400,14 @@ class CompiledNetwork:
         stored weights actually occupy (``ceil(8 / cell_bits)``) — the
         area/energy numbers price what the executor runs, not an assumed
         16-bit width; the ``precision`` section reports which happened.
+
+        Certification: a program carrying a
+        :class:`~repro.analysis.ranges.RangeCertificate` additionally
+        gets a ``certified_potential`` section — each int8 conv re-priced
+        at the *certified* minimum cells-per-weight its row-groups
+        provably fit (``core/simulator.mapping_cost``, the same chain as
+        the layer rows, so "current" numbers match them exactly) — the
+        area/energy win an MSR-style variable-cell lowering would unlock.
         """
         stored_cells = self.cells_per_weight
         if stored_cells is not None and stored_cells != config.cells_per_weight:
@@ -420,6 +514,10 @@ class CompiledNetwork:
             "cells_per_weight": config.cells_per_weight,
             "derived_from_storage": stored_cells is not None,
         }
+        if self.certificate is not None:
+            rep["certified_potential"] = self._certified_potential(
+                config, energy
+            )
 
         e_noskip = rep["energy_pj"]
         e_assumed = tot(assumed, "ours_energy_pj") if has_assumed else None

@@ -15,7 +15,11 @@ metadata: an optional per-conv ``mapping``
 (:meth:`~repro.core.mapping.MappingCandidate.to_manifest`) and the FC
 ``reorder`` tag — v1/v2 programs load with no mapping and the
 'pattern' reorder (the fixed scheme), so old artifacts keep their
-historical pricing.
+historical pricing.  Format v4 adds the optional range
+``certificate`` (:class:`~repro.analysis.ranges.RangeCertificate`):
+v1-v3 programs load with ``certificate=None``, and only its structure
+is checked here (M003) — whether the certificate still matches the
+payloads is the certification pass's job (V506).
 """
 
 from __future__ import annotations
@@ -44,9 +48,10 @@ __all__ = [
 
 _MANIFEST = "program.json"
 # v2 adds precision/cell_bits + per-bp w_scales; v3 adds per-conv
-# mapping candidates + the fc reorder tag
-_FORMAT_VERSION = 3
-_SUPPORTED_VERSIONS = (1, 2, 3)
+# mapping candidates + the fc reorder tag; v4 adds the optional range
+# certificate
+_FORMAT_VERSION = 4
+_SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 
 def _save_array(directory: str, name: str, arr) -> str:
@@ -122,6 +127,8 @@ def save_program(directory: str, program: CompiledNetwork) -> str:
     }
     if program.partition is not None:
         manifest["partition"] = program.partition.to_manifest()
+    if getattr(program, "certificate", None) is not None:
+        manifest["certificate"] = program.certificate.to_manifest()
     for c in program.convs:
         manifest["convs"].append(
             {
@@ -206,6 +213,9 @@ _CONV_KEYS = ("name", "c_in", "c_out", "kernel", "out_hw", "pool_after",
               "bias", "pattern_bits", "bp")
 _MAPPING_KEYS = ("rows", "cols", "cells_per_weight", "ou_rows", "ou_cols",
                  "block_order", "reorder")
+_CERT_KEYS = ("input_lo", "input_hi", "precision", "cell_bits",
+              "fp32_safe", "layers")
+_CERT_LAYER_KEYS = ("name", "pre_lo", "pre_hi", "act_lo", "act_hi")
 
 
 def _require(entry: dict, keys, where: str) -> None:
@@ -243,6 +253,61 @@ def _check_mapping_entry(entry, where: str) -> None:
             raise ProgramFormatError(
                 f"program manifest {where}.{k} must be a string",
                 rule="M003",
+            )
+
+
+def _check_certificate_entry(entry, where: str) -> None:
+    """Structural (M003) check of a v4 range ``certificate`` entry.
+
+    Like :func:`_check_mapping_entry`, only keys and types are enforced
+    here — whether the certified bounds and cell table still match the
+    payloads is the certification pass's V506, so a structurally sound
+    but stale certificate surfaces as a diagnostic after load."""
+    if entry is None:
+        return
+    if not isinstance(entry, dict):
+        raise ProgramFormatError(
+            f"program manifest {where} must be an object or null",
+            rule="M003",
+        )
+    _require(entry, _CERT_KEYS, where)
+    for k in ("input_lo", "input_hi"):
+        if not isinstance(entry[k], (int, float)) or isinstance(
+            entry[k], bool
+        ):
+            raise ProgramFormatError(
+                f"program manifest {where}.{k} must be a number",
+                rule="M003",
+            )
+    if not isinstance(entry["precision"], str):
+        raise ProgramFormatError(
+            f"program manifest {where}.precision must be a string",
+            rule="M003",
+        )
+    if not isinstance(entry["cell_bits"], int) or isinstance(
+        entry["cell_bits"], bool
+    ):
+        raise ProgramFormatError(
+            f"program manifest {where}.cell_bits must be an integer",
+            rule="M003",
+        )
+    layers = entry["layers"]
+    if not isinstance(layers, list):
+        raise ProgramFormatError(
+            f"program manifest {where}.layers must be a list", rule="M003"
+        )
+    for i, e in enumerate(layers):
+        lwhere = f"{where}.layers[{i}]"
+        if not isinstance(e, dict):
+            raise ProgramFormatError(
+                f"program manifest {lwhere} must be an object", rule="M003"
+            )
+        _require(e, _CERT_LAYER_KEYS, lwhere)
+        mc = e.get("min_cells")
+        if mc is not None and not isinstance(mc, list):
+            raise ProgramFormatError(
+                f"program manifest {lwhere}.min_cells must be a list or "
+                "null", rule="M003"
             )
 
 
@@ -335,6 +400,7 @@ def validate_manifest(manifest: dict, directory: str) -> None:
     if part is not None:
         _require(part, ("data", "model", "data_axis", "model_axis"),
                  "partition")
+    _check_certificate_entry(manifest.get("certificate"), "certificate")
 
 
 def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
@@ -397,6 +463,20 @@ def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
             rule="M005",
         ) from e
     part = manifest.get("partition")
+    cert_entry = manifest.get("certificate")
+    certificate = None
+    if cert_entry is not None:
+        # lazy: diagnostics-only dependency, keeps the load path's
+        # import graph free of the analysis interpreter
+        from repro.analysis.ranges import RangeCertificate
+
+        try:
+            certificate = RangeCertificate.from_manifest(cert_entry)
+        except (KeyError, TypeError, ValueError) as e:
+            raise ProgramFormatError(
+                f"program manifest certificate failed to decode: {e}",
+                rule="M003",
+            ) from e
     program = CompiledNetwork(
         config=cfg,
         convs=convs,
@@ -406,6 +486,7 @@ def load_program(directory: str, verify: bool = True) -> CompiledNetwork:
         partition=NetworkPartition.from_manifest(part) if part else None,
         precision=manifest.get("precision", "fp32"),
         cell_bits=int(manifest.get("cell_bits", 4)),
+        certificate=certificate,
     )
     if verify:
         from repro.analysis.verify import verify_network

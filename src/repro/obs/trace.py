@@ -101,10 +101,11 @@ class Tracer:
 
     def _tid(self) -> int:
         ident = threading.get_ident()
-        tid = self._tids.get(ident)
-        if tid is None:
-            tid = self._tids[ident] = len(self._tids)
-            self._tid_names[tid] = threading.current_thread().name
+        with self._lock:
+            tid = self._tids.get(ident)
+            if tid is None:
+                tid = self._tids[ident] = len(self._tids)
+                self._tid_names[tid] = threading.current_thread().name
         return tid
 
     def _record(self, ev: Any) -> None:

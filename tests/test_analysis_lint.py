@@ -244,6 +244,118 @@ def test_l005_allow_comment_for_backcompat_reexport(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# L006: lock discipline
+# ---------------------------------------------------------------------------
+
+
+def test_l006_unlocked_mutation_fires(tmp_path):
+    report = _lint(tmp_path, """
+        import threading
+
+        class Registry:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = {}
+                self._count = 0
+
+            def add(self, key, value):
+                self._items[key] = value  # subscript store, unlocked
+                self._count += 1          # augmented assign, unlocked
+    """)
+    assert report.rules() == {"L006"}
+    assert len(report.diagnostics) == 2
+    assert "Registry.add()" in report.diagnostics[0].message
+
+
+def test_l006_locked_mutation_is_fine(tmp_path):
+    report = _lint(tmp_path, """
+        import threading
+
+        class Registry:
+            def __init__(self):
+                self._lock = threading.RLock()
+                self._items = {}
+
+            def add(self, key, value):
+                with self._lock:
+                    self._items[key] = value
+
+            def get(self, key):
+                return self._items.get(key)  # reads are not flagged
+    """)
+    assert report.clean, report.format()
+
+
+def test_l006_from_import_and_unlocked_delete(tmp_path):
+    report = _lint(tmp_path, """
+        from threading import Lock
+
+        class Cache:
+            def __init__(self):
+                self._mu = Lock()
+                self._data = {}
+
+            def evict(self, key):
+                del self._data[key]
+    """)
+    assert report.rules() == {"L006"}
+
+
+def test_l006_lockless_class_and_init_are_exempt(tmp_path):
+    report = _lint(tmp_path, """
+        import threading
+
+        class Plain:
+            def __init__(self):
+                self._items = {}
+
+            def add(self, k, v):
+                self._items[k] = v  # no lock attribute: not in scope
+
+        class Locked:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = {}
+                self._items["seed"] = 0  # __init__ is pre-publication
+    """)
+    assert report.clean, report.format()
+
+
+def test_l006_nested_def_is_skipped(tmp_path):
+    # a closure's execution context is unknown (it may run after the
+    # lock is released, or under it) — neither flagged nor excused
+    report = _lint(tmp_path, """
+        import threading
+
+        class Worker:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._state = 0
+
+            def schedule(self):
+                def callback():
+                    self._state = 1
+                return callback
+    """)
+    assert report.clean, report.format()
+
+
+def test_l006_allow_comment_suppresses(tmp_path):
+    report = _lint(tmp_path, """
+        import threading
+
+        class Snapshot:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._frozen = None
+
+            def publish(self, value):
+                self._frozen = value  # lint: allow(L006)
+    """)
+    assert report.clean, report.format()
+
+
+# ---------------------------------------------------------------------------
 # suppression + CLI + the real tree
 # ---------------------------------------------------------------------------
 

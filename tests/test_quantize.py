@@ -7,6 +7,8 @@ backends, the end-to-end accuracy of a quantized compiled CNN against its
 fp32 twin, and the cell-slice-derived hardware pricing.
 """
 
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -74,7 +76,7 @@ def test_quantize_dequantize_error_bounded_by_group_scale(rng, scale_pow):
     assert np.abs(q).max() <= QMAX
 
 
-@pytest.mark.parametrize("cell_bits", [2, 3, 4, 5, 8])
+@pytest.mark.parametrize("cell_bits", [2, 3, 4, 5, 7, 8])
 def test_cell_slices_roundtrip(rng, cell_bits):
     """Sign-magnitude cell decomposition is lossless and fits the cells."""
     q = rng.integers(-QMAX, QMAX + 1, size=(5, 7), dtype=np.int8)
@@ -82,6 +84,43 @@ def test_cell_slices_roundtrip(rng, cell_bits):
     assert s.shape == q.shape + (n_cell_slices(cell_bits),)
     assert s.max() < 2**cell_bits
     np.testing.assert_array_equal(compose_cell_slices(s, cell_bits), q)
+
+
+@pytest.mark.parametrize("cell_bits", [3, 5, 7])
+def test_cell_slices_roundtrip_exhaustive_nondividing(cell_bits):
+    """Non-dividing cell widths: bit-exact over the entire int8 domain.
+
+    When ``cell_bits`` does not divide ``WEIGHT_BITS`` the top slice is
+    narrower than the rest and carries the sign bit at an offset — the
+    exact configuration the random round-trip can miss at the domain
+    edges, so every representable value is checked.
+    """
+    q = np.arange(-QMAX, QMAX + 1, dtype=np.int8)
+    s = cell_slices(q, cell_bits)
+    assert s.max() < 2**cell_bits
+    np.testing.assert_array_equal(compose_cell_slices(s, cell_bits), q)
+
+
+@pytest.mark.parametrize("cell_bits", [3, 5, 7])
+def test_verifier_cell_slice_agreement_nondividing(rng, cell_bits):
+    """verify_bp's V114 round-trip check agrees with the quantizer at
+    non-dividing cell widths: a healthy operand is silent, and an
+    unrepresentable stored value (-128) trips both V113 and V114."""
+    from repro.analysis.verify import verify_bp
+
+    w = rng.normal(size=(64, 48)).astype(np.float32)
+    w[rng.random(w.shape) < 0.5] = 0.0
+    bp = build_block_pattern(w, block=16, tile=8, masks=nonzero_block_masks(w, 16))
+    qbp = quantize_bp(bp)
+    report = verify_bp(qbp, layer="conv", cell_bits=cell_bits)
+    assert report.ok, report.format()
+    assert not {"V113", "V114"} & report.rules()
+
+    w_comp = np.asarray(qbp.w_comp).copy()
+    w_comp[0, 0, 0, 0] = -128  # |q| > QMAX never survives the slice trip
+    broken = dataclasses.replace(qbp, w_comp=w_comp)
+    report = verify_bp(broken, layer="conv", cell_bits=cell_bits)
+    assert {"V113", "V114"} <= report.rules(), report.format()
 
 
 def test_quantized_bp_dense_within_bound(rng):

@@ -51,6 +51,35 @@ def test_cell_slices_roundtrip(seed, cell_bits):
     np.testing.assert_array_equal(compose_cell_slices(s, cell_bits), q)
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    cell_bits=st.sampled_from([3, 5, 7]),
+)
+def test_cell_slices_roundtrip_nondividing_agrees_with_verifier(
+    seed, cell_bits
+):
+    """Non-dividing cell widths (narrow top slice, offset sign bit):
+    the round trip is lossless and ``verify_bp`` raises no V113/V114 on
+    the quantized operand at the same width."""
+    from repro.analysis.verify import verify_bp
+    from repro.core.sparse import build_block_pattern, nonzero_block_masks
+
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-QMAX, QMAX + 1, size=(4, 9), dtype=np.int8)
+    s = cell_slices(q, cell_bits)
+    assert s.max() < 2**cell_bits
+    np.testing.assert_array_equal(compose_cell_slices(s, cell_bits), q)
+
+    w = rng.normal(size=(48, 32)).astype(np.float32)
+    w[rng.random(w.shape) < 0.6] = 0.0
+    bp = build_block_pattern(
+        w, block=16, tile=8, masks=nonzero_block_masks(w, 16)
+    )
+    report = verify_bp(quantize_bp(bp), layer="conv", cell_bits=cell_bits)
+    assert not {"V113", "V114"} & report.rules(), report.format()
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_quantized_bp_dense_within_bound(seed):
